@@ -1,0 +1,69 @@
+"""The paper's published numbers (ground truth for validation).
+
+Table V: system-level throughput / energy improvement factors vs the
+RV32IMC CPU baseline (higher is better), per kernel x bitwidth.
+"""
+
+# (caesar, carus) throughput improvement factors
+TABLE_V_THROUGHPUT = {
+    "xor":        {8: (5.0, 12.7), 16: (5.0, 12.7), 32: (5.0, 12.7)},
+    "add":        {8: (8.0, 20.3), 16: (11.0, 27.9), 32: (5.0, 12.7)},
+    "mul":        {8: (22.0, 42.0), 16: (11.0, 27.9), 32: (5.0, 12.6)},
+    "matmul":     {8: (28.0, 53.9), 16: (14.0, 37.1), 32: (5.6, 11.0)},
+    "gemm":       {8: (9.1, 31.6), 16: (6.7, 24.1), 32: (3.3, 7.3)},
+    "conv2d":     {8: (16.9, 47.5), 16: (8.3, 29.3), 32: (6.4, 10.0)},
+    "relu":       {8: (26.0, 99.6), 16: (12.0, 46.0), 32: (5.0, 19.1)},
+    "leaky_relu": {8: (12.0, 26.9), 16: (5.7, 12.9), 32: (2.4, 5.3)},
+    "maxpool":    {8: (3.9, 6.3), 16: (3.5, 5.7), 32: (6.1, 3.7)},
+}
+
+# (caesar, carus) energy improvement factors
+TABLE_V_ENERGY = {
+    "xor":        {8: (4.0, 6.6), 16: (4.1, 6.7), 32: (4.7, 7.5)},
+    "add":        {8: (6.4, 10.6), 16: (8.9, 14.5), 32: (4.7, 7.5)},
+    "mul":        {8: (17.4, 23.7), 16: (9.5, 14.9), 32: (4.7, 7.1)},
+    "matmul":     {8: (25.0, 35.6), 16: (13.4, 21.8), 32: (5.8, 7.1)},
+    "gemm":       {8: (8.1, 20.7), 16: (6.5, 14.4), 32: (3.4, 4.8)},
+    "conv2d":     {8: (14.2, 29.4), 16: (7.6, 17.6), 32: (6.1, 6.3)},
+    "relu":       {8: (22.4, 59.3), 16: (11.6, 28.9), 32: (5.1, 2.8)},
+    "leaky_relu": {8: (10.3, 17.3), 16: (5.0, 8.6), 32: (2.2, 3.7)},
+    "maxpool":    {8: (3.8, 6.7), 16: (3.5, 5.8), 32: (5.8, 3.5)},
+}
+
+# Suspected erratum: relu/32-bit Carus energy 2.8x with 19.1x throughput
+# would imply the NMC system draws 6.8x the CPU system's power (~42 mW)
+# — physically impossible for this macro (peak ~10 mW at 250 MHz); every
+# neighbouring cell has energy ~= throughput / 1.5.
+SUSPECTED_ERRATA = {("relu", 32, "carus", "energy")}
+
+# Table VIII: matmul A[10,10] x B[10,P] cycle counts (65 nm), P = 1024/512/256
+TABLE_VIII_CYCLES = {
+    "blade_multi":  {8: 12.8e3, 16: 25.6e3, 32: 51.2e3},
+    "blade_single": {8: 204.8e3, 16: 409.6e3, 32: 819.2e3},
+    "csram":        {8: 19.2e3, 16: 38.4e3, 32: 76.8e3},
+    "caesar":       {8: 51.2e3, 16: 51.2e3, 32: 51.2e3},
+    "carus":        {8: 26.6e3, 16: 19.5e3, 32: 26.0e3},
+}
+TABLE_VIII_PJ_PER_MAC_65NM = {
+    "blade_multi":  {8: 7.9, 16: 26.7, 32: 103.0},
+    "blade_single": {8: 43.0, 16: 97.1, 32: 320.0},
+    "csram":        {8: 150.0, 16: 600.0, 32: 2400.0},
+    "caesar":       {8: 16.3, 16: 32.0, 32: 61.8},
+    "carus":        {8: 6.8, 16: 12.0, 32: 31.2},
+}
+TABLE_VIII_P = {8: 1024, 16: 512, 32: 256}
+
+# Fig. 12 saturation values (8-bit matmul, large P)
+FIG12_CARUS_SAT_OUT_PER_CYC = 0.48
+FIG12_CAESAR_SAT_OUT_PER_CYC = 0.25
+FIG12_CARUS_SAT_PJ_PER_OUT = 66.0
+FIG12_CAESAR_SAT_PJ_PER_OUT = 175.0
+
+# Table VI (anomaly detection end-to-end)
+TABLE_VI = {
+    "cv32e40p_1c": {"cycles": 1.0, "energy": 1.0, "area": 1.0},
+    "cv32e40p_2c": {"cycles": 2.0, "energy": 1.37, "area": 1.43},
+    "cv32e40p_4c": {"cycles": 4.0, "energy": 1.67, "area": 2.29},
+    "caesar_e20":  {"cycles": 1.29, "energy": 1.20, "area": 0.90},
+    "carus_e20":   {"cycles": 3.55, "energy": 2.36, "area": 1.36},
+}

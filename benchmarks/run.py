@@ -1,0 +1,103 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline table.
+
+Prints a ``name,us_per_call,derived`` CSV line per benchmark (the harness
+contract), followed by each benchmark's detail table.  The NMC engines run
+at f_clk = 250 MHz (the paper's benchmarking frequency), so us_per_call is
+the modeled wall-clock of the 8-bit matmul kernel on each target.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main() -> None:
+    from repro.core import constants as C
+    from repro.core import energy, programs, timing
+    from benchmarks import fig12, table_v, table_vi, table_viii
+
+    lines = []
+
+    # -- Table V ------------------------------------------------------------
+    t0 = time.perf_counter()
+    rows_v = table_v.run(verify_functional=True)
+    errs = []
+    for r in rows_v:
+        for k in ("thr_caesar_err", "thr_carus_err", "en_caesar_err",
+                  "en_carus_err"):
+            if not (r["erratum_carus"] and k == "en_carus_err"):
+                errs.append(abs(r[k]))
+    kb = programs.build("matmul", 8)
+    us_caesar = timing.caesar_cycles(kb.caesar).total_cycles \
+        / C.F_CLK_BENCH_HZ * 1e6
+    us_carus = timing.carus_cycles(kb.carus, 8).total_cycles \
+        / C.F_CLK_BENCH_HZ * 1e6
+    lines.append(("table_v_matmul8_caesar", us_caesar,
+                  f"mean_abs_err_vs_paper={100*statistics.mean(errs):.1f}%"))
+    lines.append(("table_v_matmul8_carus", us_carus,
+                  f"median_abs_err={100*statistics.median(errs):.1f}%"))
+
+    # -- Table VI -----------------------------------------------------------
+    ok = table_vi.functional_demo()
+    rows_vi = table_vi.run()
+    carus_row = next(r for r in rows_vi if r["config"] == "carus_e20")
+    lines.append(("table_vi_anomaly_carus",
+                  carus_row["model_cycles"] / C.F_CLK_BENCH_HZ * 1e6,
+                  f"functional={'bitexact' if ok else 'FAIL'},"
+                  f"cycle_factor={carus_row['model_cycle_factor']:.2f}"
+                  f"_vs_paper_{carus_row['paper_cycle_factor']}"))
+
+    # -- Table VIII ---------------------------------------------------------
+    rows_viii = table_viii.run()
+    pk = table_viii.peak_efficiency_gops_w()
+    lines.append(("table_viii_matmul8_carus",
+                  rows_viii[0]["carus_cycles"] / C.F_CLK_BENCH_HZ * 1e6,
+                  f"pj_per_mac={rows_viii[0]['carus_pj_mac']:.1f}"
+                  f"_paper_{rows_viii[0]['carus_pj_mac_paper']}"))
+    lines.append(("table_vii_peak_gops_w", 0.0,
+                  f"model={pk['model_gops_w']:.1f}_paper="
+                  f"{pk['paper_gops_w']}"))
+
+    # -- Fig 12 ---------------------------------------------------------------
+    rows_12 = fig12.run()
+    sat = rows_12[-1]
+    lines.append(("fig12_saturation", 0.0,
+                  f"carus_out_per_cyc={sat['carus_out_per_cyc']:.3f}"
+                  f"_paper_0.48"))
+
+    # -- Fig 13 ---------------------------------------------------------------
+    from benchmarks import fig13
+    bd = fig13.run(8)
+    vrf_frac = bd["carus"]["vrf"] / sum(bd["carus"].values())
+    lines.append(("fig13_power_breakdown", 0.0,
+                  f"carus_vrf_share={vrf_frac:.2f}_paper_~0.6"))
+
+    # -- Roofline (reads dry-run artifacts if present) ------------------------
+    try:
+        from benchmarks import roofline
+        rows_rf = roofline.main(out_csv="results/roofline.csv") \
+            if os.path.isdir("results/dryrun") else []
+        if rows_rf:
+            worst = min((r for r in rows_rf if r["shape"] == "train_4k"),
+                        key=lambda r: r["mfu_bound"])
+            lines.append(("roofline_cells", 0.0,
+                          f"n={len(rows_rf)},worst_train_mfu_bound="
+                          f"{worst['mfu_bound']:.3f}@{worst['arch']}"))
+    except Exception as e:  # roofline needs dry-run artifacts
+        lines.append(("roofline_cells", 0.0, f"skipped:{type(e).__name__}"))
+
+    print("\n" + "=" * 60)
+    print("name,us_per_call,derived")
+    for name, us, derived in lines:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

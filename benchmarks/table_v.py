@@ -1,0 +1,74 @@
+"""Table V reproduction: kernel throughput/energy improvements vs the CPU.
+
+Runs every kernel x bitwidth functionally (bit-exact check on both engines),
+derives cycles/energy from the calibrated mechanistic models, and compares
+the improvement factors against the paper's published Table V.
+"""
+
+from __future__ import annotations
+
+from repro.core import energy, programs, timing
+from benchmarks import paper_data as PD
+
+
+def run(verify_functional: bool = True) -> list[dict]:
+    rows = []
+    for name in programs.ALL_KERNELS:
+        for sew in (8, 16, 32):
+            kb = programs.build(name, sew)
+            func_ok = {"caesar": None, "carus": None}
+            if verify_functional:
+                func_ok = programs.verify(kb)
+                assert all(func_ok.values()), (name, sew, func_ok)
+            t = timing.kernel_timing(kb)
+            e = energy.kernel_energy(kb)
+            cpu_cpo = t["cpu"].total_cycles / kb.n_outputs
+            cpu_epo = e["cpu"].energy_pj / kb.n_outputs
+            row = {"kernel": name, "sew": sew,
+                   "functional_ok": all(v for v in func_ok.values() if v
+                                        is not None)}
+            for eng in ("caesar", "carus"):
+                nout = getattr(kb, eng).n_outputs
+                thr = cpu_cpo / (t[eng].total_cycles / nout)
+                en = cpu_epo / (e[eng].energy_pj / nout)
+                p_thr, p_en = (PD.TABLE_V_THROUGHPUT[name][sew],
+                               PD.TABLE_V_ENERGY[name][sew])
+                i = 0 if eng == "caesar" else 1
+                row[f"thr_{eng}"] = thr
+                row[f"thr_{eng}_paper"] = p_thr[i]
+                row[f"thr_{eng}_err"] = thr / p_thr[i] - 1
+                row[f"en_{eng}"] = en
+                row[f"en_{eng}_paper"] = p_en[i]
+                row[f"en_{eng}_err"] = en / p_en[i] - 1
+                row[f"erratum_{eng}"] = (name, sew, eng, "energy") in \
+                    PD.SUSPECTED_ERRATA
+            rows.append(row)
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'kernel':12s} sew | thrC model/paper | thrK model/paper |"
+          f" enC model/paper | enK model/paper")
+    errs = []
+    for r in rows:
+        print(f"{r['kernel']:12s} {r['sew']:3d} |"
+              f" {r['thr_caesar']:6.1f}/{r['thr_caesar_paper']:6.1f} |"
+              f" {r['thr_carus']:6.1f}/{r['thr_carus_paper']:6.1f} |"
+              f" {r['en_caesar']:6.1f}/{r['en_caesar_paper']:6.1f} |"
+              f" {r['en_carus']:6.1f}/{r['en_carus_paper']:6.1f}"
+              + ("  [suspected paper erratum]" if r["erratum_carus"] else ""))
+        for k in ("thr_caesar_err", "thr_carus_err", "en_caesar_err",
+                  "en_carus_err"):
+            if not (r["erratum_carus"] and k == "en_carus_err"):
+                errs.append(abs(r[k]))
+    import statistics
+    print(f"\nvalidation vs Table V ({len(errs)} cells, erratum excluded): "
+          f"mean |err| {100*statistics.mean(errs):.1f}%, "
+          f"median {100*statistics.median(errs):.1f}%, "
+          f"max {100*max(errs):.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

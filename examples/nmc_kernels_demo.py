@@ -1,0 +1,60 @@
+"""Pallas kernel demo: the TPU-native transcriptions of the paper's engines.
+
+1. ``vrf_alu`` — the NM-Carus VPU as a fused vector-program kernel: an
+   N-instruction program executes against a VMEM-resident register file in
+   ONE pallas_call (one HBM round-trip instead of N), with the program as
+   runtime data (the indirect-addressing property: no retrace per program).
+2. ``nmc_matmul`` — the W8A8 vmacc loop on the MXU with fused
+   dequant+bias+activation epilogue.
+
+Both run here in interpret mode (CPU container); on TPU hardware the same
+calls lower to Mosaic.
+
+Run:  PYTHONPATH=src python examples/nmc_kernels_demo.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.nmc_matmul import nmc_matmul
+from repro.kernels.vrf_alu import make_prog, vrf_alu
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    print("vrf_alu: one kernel, arbitrary programs (program = data)")
+    vrf = jnp.asarray(rng.integers(-100, 100, (32, 4096)).astype(np.int16))
+    # program A: leaky-relu of v1 into v3 via the paper's max(x, x>>2) trick
+    prog_a = make_prog([("sra", 2, 0, 1, 2, ref.VRF_MODE_VX),
+                        ("max", 3, 2, 1, 0, ref.VRF_MODE_VV)])
+    # program B: fused (v1*v4 + v5) ^ v1, then clamp
+    prog_b = make_prog([("mul", 6, 4, 1, 0, ref.VRF_MODE_VV),
+                        ("add", 6, 5, 6, 0, ref.VRF_MODE_VV),
+                        ("xor", 7, 1, 6, 0, ref.VRF_MODE_VV),
+                        ("min", 7, 0, 7, 100, ref.VRF_MODE_VX),
+                        ("max", 7, 0, 7, -100, ref.VRF_MODE_VX)])
+    for name, prog in (("leaky_relu", prog_a), ("fused_chain", prog_b)):
+        out = vrf_alu(vrf, prog, block_vl=1024, interpret=True)
+        pd = {k: np.asarray(prog[:, i]) for i, k in
+              enumerate(("op", "vd", "vs1", "vs2", "scalar", "mode"))}
+        exp = ref.vrf_alu(vrf, pd)
+        print(f"  {name}: {prog.shape[0]} instrs, one HBM round-trip, "
+              f"bit-exact={bool((np.asarray(out) == np.asarray(exp)).all())}")
+
+    print("\nnmc_matmul: W8A8 with fused epilogue (int32 accumulation)")
+    m, k, n = 512, 1024, 512
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)) * 0.05
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    wq, sw = ref.quantize_rowwise(w)
+    xq, sx = ref.quantize_dynamic(x)
+    y = nmc_matmul(xq, wq, sw * sx, None, act="relu", interpret=True)
+    exact = jnp.maximum(x @ w, 0)
+    rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
+    print(f"  {m}x{k}x{n}: relative error vs fp32 {rel:.4f} "
+          f"(int8 weights: {k*n/2**20:.1f} MiB vs fp32 {4*k*n/2**20:.1f})")
+
+
+if __name__ == "__main__":
+    main()

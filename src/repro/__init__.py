@@ -1,0 +1,4 @@
+"""repro: NM-Caesar / NM-Carus near-memory computing, rebuilt as a TPU-native
+JAX training/serving framework.  See DESIGN.md for the layer map."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,149 @@
+"""Checkpointing: atomic, versioned, restart- and resize-safe.
+
+Format: one directory per step (``step_000123/``) holding
+  * ``tree.json``  — pytree structure + leaf metadata (shape/dtype),
+  * ``leaf_XXXXX.npy`` — one file per leaf (written via a temp dir + rename,
+    so a torn write never corrupts the latest checkpoint),
+  * ``DONE``       — commit marker; restore only considers committed steps.
+
+Multi-host: each host writes its addressable shards (here: single-host
+writes everything); restore reshards onto the *current* mesh by sharded
+``jax.device_put``, so a checkpoint taken on N hosts restores on M — the
+elastic-resize path (runtime/elastic.py) relies on this.
+
+A background thread handles async saves (the train loop never blocks on
+disk); ``wait()`` drains pending writes before exit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    """Synchronous atomic save.  Returns the committed directory."""
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    meta = {"step": step, "treedef": str(treedef),
+            "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(arr.dtype)
+        if "bfloat16" in logical:
+            arr = arr.view(np.uint16)   # numpy can't serialize ml_dtypes
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        meta["leaves"].append({"shape": list(arr.shape),
+                               "dtype": logical})
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, "DONE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(path, d, "DONE")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any, shardings=None) -> Any:
+    """Restore into the structure of `like`; reshard onto `shardings`
+    (a matching pytree of NamedShardings) when given."""
+    import ml_dtypes
+    d = os.path.join(path, f"step_{step:08d}")
+    assert os.path.exists(os.path.join(d, "DONE")), f"uncommitted ckpt {d}"
+    with open(os.path.join(d, "tree.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = _flatten(like)
+    out = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    for i, (leaf, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        if "bfloat16" in meta["leaves"][i]["dtype"]:
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"leaf {i}: ckpt {arr.shape} vs model {leaf.shape}"
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with a bounded queue."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.path, step, tree)
+                self._gc()
+            except BaseException as e:   # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(s for s in (latest_step(self.path),) if s is not None)
+        all_steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.path)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in all_steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def submit(self, step: int, tree: Any):
+        if self._err:
+            raise self._err
+        # materialize on host *now* so the train loop can donate buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join(timeout=10)

@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned arch) + shape registry."""
+
+from repro.configs.base import ARCH_IDS, SHAPES, applicable_shapes, get
+
+__all__ = ["ARCH_IDS", "SHAPES", "applicable_shapes", "get"]

@@ -1,0 +1,16 @@
+"""The paper's core: NMC functional simulators, ISA, timing & energy models.
+
+Layer A of DESIGN.md — the faithful reproduction of NM-Caesar / NM-Carus.
+"""
+
+from repro.core import alu, constants, isa
+from repro.core.caesar import CaesarConfig, CaesarEngine, stream_to_arrays
+from repro.core.carus import CarusConfig, CarusVPU, trace_entry, trace_to_arrays
+from repro.core.ecpu import ECpu, assemble
+
+__all__ = [
+    "alu", "constants", "isa",
+    "CaesarConfig", "CaesarEngine", "stream_to_arrays",
+    "CarusConfig", "CarusVPU", "trace_entry", "trace_to_arrays",
+    "ECpu", "assemble",
+]

@@ -1,0 +1,170 @@
+"""Bit-exact packed-SIMD integer ALU semantics shared by NM-Caesar and NM-Carus.
+
+Both NMC macros operate on 32-bit memory words interpreted as packed vectors of
+4x8-bit, 2x16-bit or 1x32-bit two's-complement integers (the paper's "standard
+data types", Section III).  This module is the single source of arithmetic
+truth: the Caesar engine, the Carus VPU, the Pallas `vrf_alu` kernel and the
+pure-jnp oracles all reduce to these lane operations.
+
+All functions are jit-compatible and vectorized over arrays of words.  `sew`
+(selected element width, bits) is a static Python int — JAX traces one program
+per element width, exactly like the hardware statically configuring its CSR.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEWS = (8, 16, 32)
+
+
+def lanes_per_word(sew: int) -> int:
+    assert sew in SEWS, f"unsupported SEW {sew}"
+    return 32 // sew
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack between int32 words and sign-extended int32 lanes
+# ---------------------------------------------------------------------------
+
+def unpack(words: jax.Array, sew: int) -> jax.Array:
+    """words int32[...] -> sign-extended lanes int32[..., L], little-endian."""
+    words = words.astype(jnp.int32)
+    nl = lanes_per_word(sew)
+    if nl == 1:
+        return words[..., None]
+    u = _bitcast_u32(words)
+    shifts = jnp.arange(nl, dtype=jnp.uint32) * sew
+    mask = jnp.uint32((1 << sew) - 1)
+    raw = (u[..., None] >> shifts) & mask                     # u32 lanes
+    sign = jnp.uint32(1 << (sew - 1))
+    # sign extension: (raw ^ sign) - sign in modular u32, then bitcast
+    ext = (raw ^ sign) - sign
+    return _bitcast_i32(ext)
+
+
+def pack(lanes: jax.Array, sew: int) -> jax.Array:
+    """lanes int32[..., L] -> int32 words[...]; lanes truncated to SEW bits."""
+    nl = lanes_per_word(sew)
+    if nl == 1:
+        return lanes[..., 0].astype(jnp.int32)
+    mask = jnp.uint32((1 << sew) - 1)
+    u = _bitcast_u32(lanes.astype(jnp.int32)) & mask
+    shifts = jnp.arange(nl, dtype=jnp.uint32) * sew
+    word = jax.lax.reduce(u << shifts, jnp.uint32(0), jax.lax.bitwise_or,
+                          (lanes.ndim - 1,))
+    return _bitcast_i32(word)
+
+
+def _bitcast_u32(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x.astype(jnp.int32), jnp.uint32)
+
+
+def _bitcast_i32(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x.astype(jnp.uint32), jnp.int32)
+
+
+# numpy-side helpers for building memory images in tests/benchmarks ---------
+
+def pack_np(arr: np.ndarray) -> np.ndarray:
+    """Pack a little-endian int8/int16/int32 numpy array into int32 words."""
+    b = np.ascontiguousarray(arr).tobytes()
+    assert len(b) % 4 == 0, "array byte size must be a multiple of 4"
+    return np.frombuffer(b, dtype="<i4").copy()
+
+
+def unpack_np(words: np.ndarray, dtype) -> np.ndarray:
+    return np.frombuffer(np.ascontiguousarray(words, dtype="<i4").tobytes(),
+                         dtype=np.dtype(dtype).newbyteorder("<")).copy()
+
+
+# ---------------------------------------------------------------------------
+# Lane ops (two's complement, wraparound at SEW — RVV / NM-Caesar semantics)
+# ---------------------------------------------------------------------------
+
+def _shift_amount(b_lanes: jax.Array, sew: int) -> jax.Array:
+    # RVV: shift amount is taken modulo SEW.
+    return _bitcast_u32(b_lanes) % jnp.uint32(sew)
+
+
+def lane_binop(op: str, a: jax.Array, b: jax.Array, sew: int) -> jax.Array:
+    """Apply `op` on sign-extended int32 lanes; result is NOT yet truncated
+    (pack() truncates).  Multiplies wrap modulo 2^32 which is exact for the
+    low SEW bits of the product — matching hardware truncating multiplies."""
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "minu":
+        au, bu = _zext(a, sew), _zext(b, sew)
+        return jnp.where(au <= bu, a, b)
+    if op == "maxu":
+        au, bu = _zext(a, sew), _zext(b, sew)
+        return jnp.where(au >= bu, a, b)
+    if op == "sll":
+        sh = _shift_amount(b, sew)
+        return _bitcast_i32(_bitcast_u32(a) << sh)
+    if op == "srl":
+        sh = _shift_amount(b, sew)
+        mask = jnp.uint32((1 << sew) - 1) if sew < 32 else jnp.uint32(0xFFFFFFFF)
+        return _bitcast_i32((_bitcast_u32(a) & mask) >> sh)
+    if op == "sra":
+        sh = _shift_amount(b, sew).astype(jnp.int32)
+        return a >> sh   # lanes are sign-extended => arithmetic shift correct
+    raise ValueError(f"unknown lane op {op!r}")
+
+
+def _zext(lanes: jax.Array, sew: int) -> jax.Array:
+    mask = jnp.uint32((1 << sew) - 1) if sew < 32 else jnp.uint32(0xFFFFFFFF)
+    return _bitcast_u32(lanes) & mask
+
+
+BINOPS = ("add", "sub", "mul", "and", "or", "xor", "min", "max", "minu",
+          "maxu", "sll", "srl", "sra")
+
+
+# ---------------------------------------------------------------------------
+# Word-level operations used by the engines
+# ---------------------------------------------------------------------------
+
+def word_binop(op: str, a_words: jax.Array, b_words: jax.Array, sew: int) -> jax.Array:
+    """Element-wise packed-SIMD op on arrays of int32 words."""
+    a = unpack(a_words, sew)
+    b = unpack(b_words, sew)
+    return pack(lane_binop(op, a, b, sew), sew)
+
+
+def word_macc(acc_words: jax.Array, a_words: jax.Array, b_words: jax.Array,
+              sew: int) -> jax.Array:
+    """Per-lane multiply-accumulate: acc[i] += a[i]*b[i] (wraps at SEW).
+    NM-Caesar MAC / NM-Carus vmacc semantics."""
+    a = unpack(a_words, sew)
+    b = unpack(b_words, sew)
+    acc = unpack(acc_words, sew)
+    return pack(acc + a * b, sew)
+
+
+def word_dot(acc32: jax.Array, a_words: jax.Array, b_words: jax.Array,
+             sew: int) -> jax.Array:
+    """Word-wise dot product accumulated into a 32-bit scalar accumulator:
+    acc32 += sum_l a_l * b_l  (NM-Caesar DOT; wraps modulo 2^32)."""
+    a = unpack(a_words, sew)
+    b = unpack(b_words, sew)
+    prod = (a * b).sum(axis=-1).astype(jnp.int32)
+    if prod.ndim:
+        prod = prod.sum(dtype=jnp.int32)
+    return (acc32 + prod).astype(jnp.int32)

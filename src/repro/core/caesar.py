@@ -1,0 +1,127 @@
+"""NM-Caesar functional model: 2-bank memory + multi-cycle packed-SIMD ALU.
+
+NM-Caesar is micro-controlled by the host: each instruction arrives as a bus
+write (see :func:`repro.core.isa.caesar_encode`).  The engine here executes a
+pre-assembled instruction *stream* — exactly what the system DMA engine would
+replay from main memory — inside one ``jax.lax.scan``.
+
+State: a flat 8192-word memory (2 x 16 KiB single-port banks; bank = high
+address bit), a packed MAC accumulator word, and a 32-bit DOT accumulator.
+SEW is static per stream (the CSRW configuration instruction is modeled as a
+stream boundary, matching how the paper's kernels configure the width once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alu
+from repro.core import constants as C
+from repro.core import isa
+from repro.core.isa import CaesarOp
+
+
+@dataclasses.dataclass(frozen=True)
+class CaesarConfig:
+    mem_words: int = C.CAESAR_MEM_BYTES // C.WORD_BYTES  # 8192
+    n_banks: int = C.CAESAR_N_BANKS
+
+    @property
+    def bank_words(self) -> int:
+        return self.mem_words // self.n_banks
+
+    def bank_of(self, word_addr):
+        return word_addr // self.bank_words
+
+
+_BINOP_OF = {
+    CaesarOp.AND: "and", CaesarOp.OR: "or", CaesarOp.XOR: "xor",
+    CaesarOp.ADD: "add", CaesarOp.SUB: "sub", CaesarOp.MUL: "mul",
+    CaesarOp.SLL: "sll", CaesarOp.SLR: "srl", CaesarOp.SRA: "sra",
+    CaesarOp.MIN: "min", CaesarOp.MAX: "max",
+}
+
+
+def stream_to_arrays(entries: list[tuple[CaesarOp, int, int, int]]) -> dict:
+    arr = np.array([(int(op), d, s1, s2) for op, d, s1, s2 in entries],
+                   dtype=isa.CAESAR_TRACE_DTYPE)
+    return {n: jnp.asarray(arr[n]) for n in arr.dtype.names}
+
+
+class CaesarEngine:
+    def __init__(self, config: CaesarConfig | None = None):
+        self.cfg = config or CaesarConfig()
+
+    @functools.partial(jax.jit, static_argnames=("self", "sew"))
+    def run_stream(self, mem: jax.Array, stream: dict, sew: int):
+        """Execute an instruction stream.  Returns (mem, mac_acc, dot_acc)."""
+
+        def step(carry, ins):
+            mem, mac_acc, dot_acc = carry
+            op, dest, src1, src2 = ins["op"], ins["dest"], ins["src1"], ins["src2"]
+            a = mem[src1]
+            b = mem[src2]
+
+            def binop_branch(name):
+                def f(_):
+                    r = alu.word_binop(name, a[None], b[None], sew)[0]
+                    return mem.at[dest].set(r), mac_acc, dot_acc
+                return f
+
+            def mac_init(_):
+                z = jnp.int32(0)
+                acc = alu.word_macc(z[None], a[None], b[None], sew)[0]
+                return mem, acc, dot_acc
+
+            def mac(_):
+                acc = alu.word_macc(mac_acc[None], a[None], b[None], sew)[0]
+                return mem, acc, dot_acc
+
+            def mac_store(_):
+                acc = alu.word_macc(mac_acc[None], a[None], b[None], sew)[0]
+                return mem.at[dest].set(acc), acc, dot_acc
+
+            def dot_init(_):
+                acc = alu.word_dot(jnp.int32(0), a, b, sew)
+                return mem, mac_acc, acc
+
+            def dot(_):
+                acc = alu.word_dot(dot_acc, a, b, sew)
+                return mem, mac_acc, acc
+
+            def dot_store(_):
+                acc = alu.word_dot(dot_acc, a, b, sew)
+                return mem.at[dest].set(acc), mac_acc, acc
+
+            def nop(_):
+                return mem, mac_acc, dot_acc
+
+            branches = []
+            for o in CaesarOp:
+                if o in _BINOP_OF:
+                    branches.append(binop_branch(_BINOP_OF[o]))
+                elif o == CaesarOp.MAC_INIT:
+                    branches.append(mac_init)
+                elif o == CaesarOp.MAC:
+                    branches.append(mac)
+                elif o == CaesarOp.MAC_STORE:
+                    branches.append(mac_store)
+                elif o == CaesarOp.DOT_INIT:
+                    branches.append(dot_init)
+                elif o == CaesarOp.DOT:
+                    branches.append(dot)
+                elif o == CaesarOp.DOT_STORE:
+                    branches.append(dot_store)
+                else:  # CSRW handled at stream boundaries
+                    branches.append(nop)
+            return jax.lax.switch(op, branches, None), jnp.int32(0)
+
+        mem = jnp.asarray(mem, jnp.int32)
+        carry0 = (mem, jnp.int32(0), jnp.int32(0))
+        (mem, mac_acc, dot_acc), _ = jax.lax.scan(step, carry0, stream)
+        return mem, mac_acc, dot_acc

@@ -1,0 +1,203 @@
+"""NM-Carus functional model: banked VRF + single-issue xvnmc VPU.
+
+The VPU executes *traces* — arrays of issued instructions (scalar GPR operands
+already resolved, see :data:`repro.core.isa.CARUS_TRACE_DTYPE`) — inside a
+single ``jax.lax.scan``: one dispatch from the host, then the whole kernel runs
+"autonomously" against the VRF.  This mirrors the hardware split: the eCPU
+(see :mod:`repro.core.ecpu`) produces the issue stream; the VPU consumes it.
+
+Indirect register addressing (the paper's code-size mechanism) is resolved
+*inside* the engine from the scalar value's three LSBytes, i.e. register
+indices are runtime data — the same scanned instruction template is reused
+for arbitrary operand locations, exactly like the hardware.
+
+Functional semantics are element-exact (two's complement, wrap at SEW) via
+:mod:`repro.core.alu`.  SEW is static per trace (the paper's kernels configure
+the element width once via ``vsetvl``); VL is dynamic carry state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alu
+from repro.core import constants as C
+from repro.core import isa
+from repro.core.isa import VOp
+
+
+@dataclasses.dataclass(frozen=True)
+class CarusConfig:
+    n_regs: int = C.CARUS_N_VREGS
+    reg_words: int = C.CARUS_REG_WORDS
+    n_lanes: int = C.CARUS_N_LANES
+
+    @property
+    def mem_words(self) -> int:
+        return self.n_regs * self.reg_words
+
+    def vlmax(self, sew: int) -> int:
+        return self.reg_words * (32 // sew)
+
+
+# Compact opcode ids used by the scanned executor (dense for lax.switch).
+_COMPACT = [VOp.VADD, VOp.VSUB, VOp.VMUL, VOp.VMACC, VOp.VAND, VOp.VOR,
+            VOp.VXOR, VOp.VMIN, VOp.VMINU, VOp.VMAX, VOp.VMAXU, VOp.VSLL,
+            VOp.VSRL, VOp.VSRA, VOp.VMV, VOp.VSLIDEUP, VOp.VSLIDEDOWN,
+            VOp.EMVV, VOp.EMVX, VOp.VSETVL]
+COMPACT_ID = {op: i for i, op in enumerate(_COMPACT)}
+_ARITH_BY_ID = {COMPACT_ID[k]: v for k, v in isa.ARITH_OPS.items()}
+
+
+def trace_entry(op: VOp, vd=0, vs1=0, vs2=0, sval1=0, sval2=0, imm=0,
+                mode=isa.MODE_VV) -> np.ndarray:
+    e = np.zeros((), dtype=isa.CARUS_TRACE_DTYPE)
+    e["op"] = COMPACT_ID[op]
+    e["vd"], e["vs1"], e["vs2"] = vd, vs1, vs2
+    e["sval1"], e["sval2"], e["imm"], e["mode"] = (
+        np.int32(sval1), np.int32(sval2), np.int32(imm), mode)
+    return e
+
+
+class CarusVPU:
+    """Scan-based xvnmc trace executor over a (n_regs, reg_words) int32 VRF."""
+
+    def __init__(self, config: CarusConfig | None = None):
+        self.cfg = config or CarusConfig()
+
+    # -- host memory-mode view ------------------------------------------------
+    def vrf_from_words(self, words) -> jax.Array:
+        """Host address space -> register view (registers are bank-aligned,
+        Fig. 6; host word w lives in register w // reg_words)."""
+        return jnp.asarray(words, jnp.int32).reshape(
+            self.cfg.n_regs, self.cfg.reg_words)
+
+    def words_from_vrf(self, vrf: jax.Array) -> jax.Array:
+        return vrf.reshape(-1)
+
+    # -- execution -------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnames=("self", "sew"))
+    def run_trace(self, vrf: jax.Array, trace: dict, sew: int, vl0=None):
+        """Execute a trace.  `trace` is a dict of equal-length int32 arrays
+        with the CARUS_TRACE_DTYPE fields.  Returns (vrf, vl, emvx_outs)."""
+        cfg = self.cfg
+        vlmax = cfg.vlmax(sew)
+        vl0 = jnp.int32(vlmax if vl0 is None else vl0)
+        L = 32 // sew
+        n_elems = cfg.reg_words * L
+        elem_ids = jnp.arange(n_elems, dtype=jnp.int32)
+
+        def read_reg(vrf, idx):
+            return jax.lax.dynamic_index_in_dim(vrf, idx, axis=0,
+                                                keepdims=False)
+
+        def elems(reg_words):
+            return alu.unpack(reg_words, sew).reshape(-1)
+
+        def write_back(vrf, vd, old_words, new_elems, vl):
+            """VL-masked (tail-undisturbed) writeback of element vector."""
+            old_elems = elems(old_words)
+            sel = jnp.where(elem_ids < vl, new_elems, old_elems)
+            packed = alu.pack(sel.reshape(cfg.reg_words, L), sew)
+            return jax.lax.dynamic_update_index_in_dim(vrf, packed, vd, axis=0)
+
+        def step(carry, tr):
+            vrf, vl = carry
+            op, vd_f, vs1_f, vs2_f = tr["op"], tr["vd"], tr["vs1"], tr["vs2"]
+            sval1, sval2, imm, mode = (tr["sval1"], tr["sval2"], tr["imm"],
+                                       tr["mode"])
+            indirect = (mode & isa.MODE_INDIRECT) != 0
+            slide1 = (mode & isa.MODE_SLIDE1) != 0
+            opmode = mode & 0x3
+            # Indirect register addressing: indices from sval2's LSBytes.
+            vd = jnp.where(indirect, (sval2 >> 16) & 0xFF, vd_f) % cfg.n_regs
+            vs2 = jnp.where(indirect, (sval2 >> 8) & 0xFF, vs2_f) % cfg.n_regs
+            vs1 = jnp.where(indirect, sval2 & 0xFF, vs1_f) % cfg.n_regs
+
+            dst_w = read_reg(vrf, vd)
+            s2_w = read_reg(vrf, vs2)
+            s1_w = read_reg(vrf, vs1)
+            dst_e, s2_e, s1_reg_e = elems(dst_w), elems(s2_w), elems(s1_w)
+            scalar_b = jnp.where(opmode == isa.MODE_VI, imm, sval1)
+            # operand-1 elements: vs1 register (vv) or splat scalar/imm
+            s1_e = jnp.where(opmode == isa.MODE_VV, s1_reg_e, scalar_b)
+
+            def arith(lane_op):
+                def f(_):
+                    r = alu.lane_binop(lane_op, s2_e, s1_e, sew)
+                    return write_back(vrf, vd, dst_w, r, vl), jnp.int32(0)
+                return f
+
+            def macc(_):
+                r = dst_e + s2_e * s1_e
+                return write_back(vrf, vd, dst_w, r, vl), jnp.int32(0)
+
+            def vmv(_):
+                return write_back(vrf, vd, dst_w, s1_e, vl), jnp.int32(0)
+
+            def slide(up):
+                def f(_):
+                    off = jnp.where(slide1, 1, scalar_b)
+                    if up:
+                        idx = elem_ids - off
+                        gathered = s2_e[jnp.clip(idx, 0, n_elems - 1)]
+                        r = jnp.where(idx >= 0, gathered, dst_e)
+                        r = jnp.where(slide1 & (elem_ids == 0), sval1, r)
+                    else:
+                        idx = elem_ids + off
+                        gathered = s2_e[jnp.clip(idx, 0, n_elems - 1)]
+                        r = jnp.where(idx < vl, gathered, 0)
+                        r = jnp.where(slide1 & (elem_ids == vl - 1), sval1, r)
+                    return write_back(vrf, vd, dst_w, r, vl), jnp.int32(0)
+                return f
+
+            def emvv(_):
+                idx = sval2 % n_elems
+                r = jnp.where(elem_ids == idx, sval1, dst_e)
+                new = write_back(vrf, vd, dst_w, r, jnp.int32(n_elems))
+                return new, jnp.int32(0)
+
+            def emvx(_):
+                idx = sval1 % n_elems
+                return vrf, s2_e[idx]
+
+            def vsetvl(_):
+                return vrf, jnp.minimum(sval1, vlmax)
+
+            branches = []
+            for cid in range(len(_COMPACT)):
+                if cid in _ARITH_BY_ID:
+                    branches.append(arith(_ARITH_BY_ID[cid]))
+                elif _COMPACT[cid] == VOp.VMACC:
+                    branches.append(macc)
+                elif _COMPACT[cid] == VOp.VMV:
+                    branches.append(vmv)
+                elif _COMPACT[cid] == VOp.VSLIDEUP:
+                    branches.append(slide(True))
+                elif _COMPACT[cid] == VOp.VSLIDEDOWN:
+                    branches.append(slide(False))
+                elif _COMPACT[cid] == VOp.EMVV:
+                    branches.append(emvv)
+                elif _COMPACT[cid] == VOp.EMVX:
+                    branches.append(emvx)
+                elif _COMPACT[cid] == VOp.VSETVL:
+                    branches.append(vsetvl)
+            new_vrf, out = jax.lax.switch(op, branches, None)
+            new_vl = jnp.where(op == COMPACT_ID[VOp.VSETVL],
+                               jnp.minimum(sval1, vlmax), vl)
+            return (new_vrf, new_vl), out
+
+        (vrf, vl), emvx_outs = jax.lax.scan(step, (vrf, vl0), trace)
+        return vrf, vl, emvx_outs
+
+
+def trace_to_arrays(entries: list[np.ndarray]) -> dict:
+    """Stack trace entries into the dict-of-arrays form run_trace expects."""
+    arr = np.array([tuple(int(e[f]) for f in isa.CARUS_TRACE_DTYPE.names)
+                    for e in entries], dtype=isa.CARUS_TRACE_DTYPE)
+    return {name: jnp.asarray(arr[name]) for name in arr.dtype.names}

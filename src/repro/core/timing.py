@@ -1,0 +1,140 @@
+"""Cycle-accurate timing models for NM-Caesar, NM-Carus and the CPU baseline.
+
+The models are *mechanistic*: cycle counts are derived from the actual
+instruction streams/traces produced by :mod:`repro.core.programs` using the
+microarchitectural rules of the paper (Sections III-A2 and III-B2), with the
+constants documented in :mod:`repro.core.constants`.  They are validated
+against every relative claim in Table V / Table VIII / Fig. 12 in
+``benchmarks/table_v.py`` (results in EXPERIMENTS.md §Paper-validation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import isa
+from repro.core.caesar import CaesarConfig
+from repro.core.carus import _COMPACT, CarusConfig
+from repro.core.isa import CaesarOp, VOp
+from repro.core.programs import EngineBuild, KernelBuild
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingReport:
+    cycles: float            # NMC-engine cycles (incl. kernel overhead)
+    host_cycles: float       # host-CPU / eCPU-serial cycles (e.g. h-pooling)
+    n_instrs: int
+    detail: dict
+
+    @property
+    def total_cycles(self) -> float:
+        return self.cycles + self.host_cycles
+
+    def seconds(self, f_hz: float = C.F_CLK_BENCH_HZ) -> float:
+        return self.total_cycles / f_hz
+
+
+# ---------------------------------------------------------------------------
+# NM-Caesar
+# ---------------------------------------------------------------------------
+
+def caesar_cycles(eb: EngineBuild, cfg: CaesarConfig | None = None) -> TimingReport:
+    cfg = cfg or CaesarConfig()
+    cycles = C.CAESAR_OFFLOAD_CYCLES
+    same_bank = 0
+    for (op, dest, s1, s2) in eb.stream:
+        if cfg.bank_of(s1) == cfg.bank_of(s2):
+            cycles += C.CAESAR_SAME_BANK_CYCLES
+            same_bank += 1
+        else:
+            cycles += C.CAESAR_CYCLES_PER_OP
+    return TimingReport(cycles, eb.host_cycles, len(eb.stream),
+                        {"same_bank_ops": same_bank})
+
+
+# ---------------------------------------------------------------------------
+# NM-Carus
+# ---------------------------------------------------------------------------
+
+def _port_accesses(vop: VOp, mode: int) -> int:
+    """VRF bank-port words touched per result word (single-port banks)."""
+    opmode = mode & 0x3
+    if vop == VOp.VMACC:
+        return 4 if opmode == isa.MODE_VV else 3   # reads vd + srcs, writes vd
+    if vop == VOp.VMV:
+        return 1 if opmode != isa.MODE_VV else 2   # splat: write-only
+    if vop in (VOp.VSLIDEUP, VOp.VSLIDEDOWN):
+        return 2
+    if opmode == isa.MODE_VV:
+        return 3
+    return 2                                        # vx / vi
+
+
+def carus_cycles(eb: EngineBuild, sew: int,
+                 cfg: CarusConfig | None = None) -> TimingReport:
+    cfg = cfg or CarusConfig()
+    vl = cfg.vlmax(sew)
+    cycles = float(C.CARUS_KERNEL_OVERHEAD_CYCLES)
+    busy = 0.0
+    for e in eb.stream:
+        vop = _COMPACT[int(e["op"])]
+        mode = int(e["mode"])
+        if vop == VOp.VSETVL:
+            vl = min(int(e["sval1"]), cfg.vlmax(sew))
+            cycles += 1
+            continue
+        if vop in (VOp.EMVV, VOp.EMVX):
+            cycles += C.CARUS_ISSUE_CYCLES   # overlapped with in-flight vector
+            continue
+        tclass = isa.VOP_TIMING_CLASS[vop]
+        alu_w = C.CARUS_ALU_WORD_CYCLES[tclass][sew]
+        port_w = _port_accesses(vop, mode)
+        words_per_lane = math.ceil(math.ceil(vl * sew / 32) / cfg.n_lanes)
+        instr_cycles = max(alu_w, port_w) * words_per_lane
+        cycles += max(instr_cycles, C.CARUS_ISSUE_CYCLES)
+        busy += instr_cycles
+    return TimingReport(cycles, eb.host_cycles, len(eb.stream),
+                        {"vector_busy": busy})
+
+
+def carus_vrf_accesses(eb: EngineBuild, sew: int,
+                       cfg: CarusConfig | None = None) -> int:
+    """Total VRF word accesses of a trace (drives the energy model)."""
+    cfg = cfg or CarusConfig()
+    vl = cfg.vlmax(sew)
+    acc = 0
+    for e in eb.stream:
+        vop = _COMPACT[int(e["op"])]
+        if vop == VOp.VSETVL:
+            vl = min(int(e["sval1"]), cfg.vlmax(sew))
+            continue
+        if vop in (VOp.EMVV, VOp.EMVX):
+            acc += 1
+            continue
+        words = math.ceil(vl * sew / 32)
+        acc += _port_accesses(vop, int(e["mode"])) * words
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# CPU baseline (RV32IMC, Table V measurements)
+# ---------------------------------------------------------------------------
+
+def cpu_cycles(kernel: str, sew: int, n_outputs: int) -> TimingReport:
+    cyc = C.CPU_CYCLES_PER_OUTPUT[kernel][sew] * n_outputs
+    return TimingReport(0.0, cyc, 0, {"model": "table_v"})
+
+
+def kernel_timing(kb: KernelBuild) -> dict[str, TimingReport]:
+    """Timing for all three execution targets of a KernelBuild."""
+    name = kb.name
+    out = {
+        "cpu": cpu_cycles(name, kb.sew, kb.n_outputs),
+        "caesar": caesar_cycles(kb.caesar),
+        "carus": carus_cycles(kb.carus, kb.sew),
+    }
+    return out

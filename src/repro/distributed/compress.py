@@ -1,0 +1,53 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 512+ chips the pod-level gradient all-reduce crosses the (slower)
+inter-pod links; int8 compression with error feedback cuts those bytes 4x
+at negligible quality cost (the error-feedback buffer makes the compression
+unbiased over time).  This is one of the paper-independent "distributed
+optimization tricks" the framework ships (DESIGN.md Layer C).
+
+Usage inside a train step (grads are per-microbatch, already meaned over
+the local data axis):
+
+    cgrads, new_err = compress_tree(grads, err_state)
+    # all-reduce / psum happens on the int8 payload via GSPMD
+    grads = decompress_tree(cgrads)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, err: jax.Array):
+    """int8 stochastic-free symmetric quantization with error feedback."""
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_err = g - q.astype(jnp.float32) * scale
+    return (q, scale), new_err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, err_state):
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    qs, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        (q, s), ne = compress(g, e)
+        qs.append((q, s))
+        errs.append(ne)
+    return jax.tree.unflatten(td, qs), jax.tree.unflatten(td, errs)
+
+
+def decompress_tree(cgrads):
+    return jax.tree.map(lambda qs: decompress(*qs), cgrads,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,209 @@
+"""Sharding rules: parameter / optimizer / activation PartitionSpecs.
+
+Layout (DESIGN.md Layer C):
+  * `model` axis — tensor parallelism: attention heads, FFN hidden, MoE
+    experts, Mamba2 heads/d_inner, vocab (head + embedding).
+  * `data` (x `pod`) axes — batch parallelism; optimizer moments are
+    additionally sharded over data on their largest divisible dim (ZeRO-2:
+    moments are only touched elementwise at the update, so extra sharding is
+    free at forward time and cuts optimizer HBM by the DP degree).
+  * KV caches shard sequence over `model` (KV head counts often don't divide
+    the axis); long-context batch=1 shapes shard sequence over data too.
+
+Everything is *name-based*: the rule walks the param pytree and matches the
+last two path components, so new modules compose without touching this file
+as long as they follow the naming convention (wq/wk/wv/wi/wg/up = column
+sharded, wo/down/out_proj = row sharded, norms replicated, ...).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+# parents whose "w" shards the OUTPUT (last) dim over `model`
+# NB: img_proj is deliberately NOT here — its output feeds the residual
+# stream, and a model-sharded feature axis there forces an all-gather of x
+# in front of every projection of every layer (§Perf pixtral iteration 1:
+# residual-stream layout poisoning, 8.2e11 B/dev of all-gathers).
+_COL = {"wq", "wk", "wv", "wi", "wg", "up", "up_gate", "in_z", "in_x",
+        "w_uk", "w_uv", "head", "w_z", "w_i", "w_f", "w_o"}
+# parents whose "w" shards the INPUT (second-to-last) dim over `model`
+_ROW = {"wo", "down", "out_proj"}
+# replicated parents (small projections / routers / norms)
+_REPL = {"router", "in_b", "in_c", "in_dt", "conv_bc", "w_dkv", "w_krope",
+         "norm", "ln1", "ln2", "lnx", "norm_ckv", "final_norm", "enc_norm",
+         "ffn_norm", "out_norm", "pos_dec"}
+# head-indexed vectors sharded over `model` on their last dim
+_HEADVEC = {"A_log", "D", "dt_bias"}
+
+
+def _spec_for(path: tuple, leaf) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    nd = leaf.ndim
+
+    def last_dim(axis_name):
+        s = [None] * nd
+        s[-1] = axis_name
+        return P(*s)
+
+    def dim(i, axis_name):
+        s = [None] * nd
+        s[i] = axis_name
+        return P(*s)
+
+    if last == "table" and parent == "embed":
+        return dim(-2, MODEL)                       # vocab-sharded embedding
+    if last == "table":                             # pos embeddings
+        return P(*([None] * nd))
+    if parent == "moe" and last in ("wi", "wg", "wo",
+                                    "wi_q", "wg_q", "wo_q") and nd >= 3:
+        return dim(-3, MODEL)                       # expert-sharded
+    if parent == "moe" and last in ("wi_s", "wg_s", "wo_s"):
+        return dim(-2, MODEL)                       # per-(expert,out) scales
+    if any(n in _REPL for n in names[-2:]):
+        return P(*([None] * nd))
+    if last in _HEADVEC:
+        return last_dim(MODEL)
+    if last.startswith("r_"):                       # sLSTM recurrent (h,p,p)
+        return dim(-3, MODEL)
+    if parent == "conv_x":
+        return last_dim(MODEL) if nd >= 1 else P()
+    if parent in _COL:
+        # quantized (NMC) form: w_q shards like w; the per-output-channel
+        # scale vector shards with the output dim
+        return last_dim(MODEL) if last in ("w", "b", "w_q", "scale") \
+            else P(*([None] * nd))
+    if parent in _ROW:
+        return dim(-2, MODEL) if last in ("w", "w_q") else P(*([None] * nd))
+    return P(*([None] * nd))
+
+
+def param_specs(params) -> dict:
+    """PartitionSpec pytree matching `params`."""
+    return jax.tree_util.tree_map_with_path(_spec_for, params)
+
+
+def fix_divisibility(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. whisper's 51865
+    vocab is not divisible by 16 -> replicate instead of crash)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(part if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_shardings(params, mesh: Mesh):
+    specs = param_specs(params)
+    return jax.tree.map(
+        lambda s, p: NamedSharding(mesh, fix_divisibility(s, p.shape, mesh)),
+        specs, params)
+
+
+def _extend_with_data(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """ZeRO-2: add pod/data sharding on the largest divisible free dim."""
+    dax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dax:
+        return spec
+    dsize = 1
+    for a in dax:
+        dsize *= mesh.shape[a]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if parts[i] is None and shape[i] % dsize == 0:
+            parts[i] = dax if len(dax) > 1 else dax[0]
+            return P(*parts)
+    return spec
+
+
+def opt_state_shardings(opt_state: dict, params, mesh: Mesh):
+    """Moments: param sharding + extra data-axis sharding (ZeRO-2)."""
+    pspecs = param_specs(params)
+
+    def mom(spec, p):
+        spec = fix_divisibility(spec, p.shape, mesh)
+        return NamedSharding(mesh, _extend_with_data(spec, p.shape, mesh))
+
+    mspec = jax.tree.map(mom, pspecs, params)
+    return {"m": mspec, "v": jax.tree.map(lambda x: x, mspec),
+            "step": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def _data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shardings(batch: dict, mesh: Mesh):
+    """tokens/frames/images: shard batch dim over pod+data if divisible."""
+    dax = _data_axes(mesh)
+    dsize = 1
+    for a in dax:
+        dsize *= mesh.shape[a]
+
+    def spec(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if x.shape[0] % dsize == 0 and dsize > 1:
+            return NamedSharding(mesh, P(dax, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * x.ndim)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(caches, mesh: Mesh, batch: int, seq_axis_hints=None):
+    """KV caches / recurrent states.  Rule: shard the batch dim over data if
+    divisible; shard the longest remaining dim (the sequence for KV caches,
+    heads for SSM states) over `model` if divisible; for batch=1 long-context
+    shapes the sequence also takes the data axes."""
+    dax = _data_axes(mesh)
+    dsize = 1
+    for a in dax:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape[MODEL] if MODEL in mesh.axis_names else 1
+
+    def spec(x):
+        parts = [None] * x.ndim
+        # find batch dim (== batch)
+        bdim = None
+        for i, s in enumerate(x.shape):
+            if s == batch:
+                bdim = i
+                break
+        batch_sharded = False
+        if bdim is not None and batch % dsize == 0 and dsize > 1:
+            parts[bdim] = dax if len(dax) > 1 else dax[0]
+            batch_sharded = True
+        # longest free dim -> model (sequence of KV caches, heads of states)
+        free = [i for i in range(x.ndim) if parts[i] is None
+                and i != bdim]
+        free.sort(key=lambda i: -x.shape[i])
+        for i in free:
+            if msize > 1 and x.shape[i] % msize == 0:
+                if not batch_sharded and dsize > 1 and \
+                        x.shape[i] % (msize * dsize) == 0:
+                    parts[i] = (*dax, MODEL)
+                else:
+                    parts[i] = MODEL
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(spec, caches)

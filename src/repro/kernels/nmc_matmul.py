@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: W8A8 integer matmul with fused near-memory epilogue.
+
+This is the NM-Carus ``vmacc`` loop mapped onto the MXU (DESIGN.md Layer B):
+
+* int8 x int8 -> int32 accumulation (the paper's rule: MACs accumulate at
+  32-bit regardless of operand width — Section III-A2 / III-B2);
+* the accumulator lives in VMEM scratch across the whole K reduction — the
+  "compute at the register file" pattern: partial sums never round-trip HBM;
+* the dequant + bias + activation epilogue is fused: the result leaves VMEM
+  exactly once, already in its final form (the NMC "results are directly
+  accessible, eliminating additional data movement" contract).
+
+Block shapes are MXU/VREG aligned: multiples of (32, 128) for int8 operands,
+(8, 128) for the f32 output.  VMEM footprint per grid step:
+  bm*bk + bk*bn (int8)  +  bm*bn*4 (int32 acc)  +  bm*bn*out_bytes
+e.g. the default 256/256/512 tiles use 256*512*2 + 256*256*4 + ... ~ 0.6 MiB,
+far under the ~128 MiB VMEM budget, allowing the pipeline to double-buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+
+def _kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+            nk: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * scale_ref[...][None, :]
+        y = y + bias_ref[...][None, :]
+        o_ref[...] = ref.apply_act(y, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "out_dtype", "bm", "bn",
+                                             "bk", "interpret"))
+def nmc_matmul(x_q: jax.Array, w_q: jax.Array, scale: jax.Array,
+               bias: jax.Array | None = None, *, act: str = "none",
+               out_dtype=jnp.float32, bm: int = 256, bn: int = 256,
+               bk: int = 512, interpret: bool = False) -> jax.Array:
+    """y[M,N] = act((x_q[M,K] @ w_q[K,N]) * scale[N] + bias[N])."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape ({m},{k})x({k},{n}) not divisible by tiles ({bm},{bn},{bk})"
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, scale.astype(jnp.float32), bias.astype(jnp.float32))

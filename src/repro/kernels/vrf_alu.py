@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: the NM-Carus VPU as a fused vector-program engine.
+
+The paper's headline software property is that a *program* of vector
+instructions runs against data that never leaves the compute memory.  The TPU
+transcription: the vector register file (VRF) is a (n_regs, VL) integer array;
+one ``pallas_call`` loads a VL-tile of every register into VMEM, executes the
+*entire instruction program* there (N ops = one HBM round-trip instead of N),
+and writes the file back in place (``input_output_aliases`` — the
+memory-mode/compute-mode duality: the buffer is storage and operand at once).
+
+Instructions are runtime data (int32 arrays), so — exactly like the paper's
+indirect register addressing — the same compiled kernel executes arbitrary
+programs over arbitrary register operands without retracing or unrolling.
+Register indices are dynamic row indices into the VMEM-resident file.
+
+Grid: VL is split into lane-blocks; every lane-block is independent (the
+paper's per-lane bank alignment, Fig. 6: element i of every register lives in
+the same bank).  Element-wise semantics are two's-complement wraparound at
+the element width, identical to :mod:`repro.core.alu`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+N_FIELDS = 6  # op, vd, vs1, vs2, scalar, mode
+
+
+def _kernel(prog_ref, vrf_ref, o_ref, *, n_instr: int):
+    dtype = vrf_ref.dtype
+
+    def body(t, file):
+        op = prog_ref[t, 0]
+        vd = prog_ref[t, 1]
+        vs1 = prog_ref[t, 2]
+        vs2 = prog_ref[t, 3]
+        scalar = prog_ref[t, 4]
+        mode = prog_ref[t, 5]
+        a = jax.lax.dynamic_index_in_dim(file, vs2, 0, keepdims=False)
+        bv = jax.lax.dynamic_index_in_dim(file, vs1, 0, keepdims=False)
+        b = jnp.where(mode == ref.VRF_MODE_VV, bv,
+                      jnp.broadcast_to(scalar.astype(dtype), bv.shape))
+        r = ref._vrf_binop(op, a, b.astype(dtype), dtype).astype(dtype)
+        return jax.lax.dynamic_update_index_in_dim(file, r, vd, 0)
+
+    file = jax.lax.fori_loop(0, n_instr, body, vrf_ref[...])
+    o_ref[...] = file
+
+
+@functools.partial(jax.jit, static_argnames=("block_vl", "interpret"))
+def vrf_alu(vrf: jax.Array, prog: jax.Array, *, block_vl: int = 512,
+            interpret: bool = False) -> jax.Array:
+    """Execute `prog` (int32 (n_instr, 6)) over `vrf` (n_regs, VL) in place.
+
+    Returns the updated register file; the input buffer is donated/aliased."""
+    n_regs, vl = vrf.shape
+    block_vl = min(block_vl, vl)
+    assert vl % block_vl == 0, (vl, block_vl)
+    n_instr = prog.shape[0]
+    return pl.pallas_call(
+        functools.partial(_kernel, n_instr=n_instr),
+        grid=(vl // block_vl,),
+        in_specs=[
+            pl.BlockSpec((n_instr, N_FIELDS), lambda i: (0, 0)),
+            pl.BlockSpec((n_regs, block_vl), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n_regs, block_vl), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(vrf.shape, vrf.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(prog, vrf)
+
+
+def make_prog(entries: list[tuple]) -> jax.Array:
+    """entries: (op_name, vd, vs1, vs2, scalar, mode) -> (n,6) int32 array."""
+    import numpy as np
+    rows = [(ref.VRF_OP_ID[op], vd, vs1, vs2, scalar, mode)
+            for (op, vd, vs1, vs2, scalar, mode) in entries]
+    return jnp.asarray(np.asarray(rows, dtype=np.int32))

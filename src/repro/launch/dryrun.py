@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline inputs.
+
+For each cell this produces a JSON record with:
+  * memory_analysis()  — per-device HBM (argument/output/temp/peak), proving
+    the sharded program fits the 16 GiB v5e budget,
+  * cost_analysis()    — HLO FLOPs + bytes accessed,
+  * the collective mix parsed from the post-SPMD optimized HLO
+    (op kind, count, per-device link bytes under ring algorithms),
+together with the roofline terms derived in benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get
+from repro.distributed import context, sharding
+from repro.launch import hlo_analysis
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum per-device link bytes of every collective in optimized HLO.
+
+    Ring-algorithm accounting per device (shapes in post-SPMD HLO are
+    per-shard): all-reduce ~ 2x result bytes; all-gather ~ result bytes
+    (each device receives (k-1)/k ~ 1x); reduce-scatter ~ operand bytes
+    ~ result bytes (we see the op result: scattered shard => k x result;
+    use result bytes as the conservative per-device estimate); all-to-all
+    and collective-permute ~ result bytes."""
+    stats: dict[str, dict] = {}
+    seen_done = set()
+    for m in _COLLECTIVE_RE.finditer(hlo):
+        tuple_part, dtype, dims, kind = m.groups()
+        if "-done(" in m.group(0):
+            continue  # async pair: count only the -start / sync form
+        if tuple_part is not None:
+            size = 0
+            for t in re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", tuple_part):
+                size += _shape_bytes(*t)
+        else:
+            size = _shape_bytes(dtype, dims)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        st = stats.setdefault(kind, {"count": 0, "link_bytes": 0.0,
+                                     "result_bytes": 0})
+        st["count"] += 1
+        st["result_bytes"] += size
+        st["link_bytes"] += factor * size
+    return stats
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             nmc_mode: str = "none", extra_tag: str = "",
+             cfg_override=None, hlo_out: str | None = None,
+             **cfg_kw) -> dict:
+    cfg = cfg_override or get(arch)
+    if cfg_kw:
+        cfg = cfg.scaled(**cfg_kw)
+    if nmc_mode != "none":
+        cfg = cfg.scaled(nmc_mode=nmc_mode)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with context.use_mesh(mesh):
+        fn, args, donate = S.cell_fn_and_inputs(cfg, shape)
+        in_shardings = _shardings_for(args, cfg, shape, mesh)
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        ana = hlo_analysis.analyze(hlo_text)   # trip-count-expanded
+        coll = parse_collectives(hlo_text)     # raw (body-once) census
+    if hlo_out:
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo_text)
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(mesh.devices.size),
+        "nmc_mode": nmc_mode, "tag": extra_tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # NOTE: xla cost_analysis counts while bodies once; the `hlo` block
+        # holds the trip-count-expanded numbers used for the roofline.
+        "xla_flops_body_once": cost.get("flops", 0.0),
+        "xla_bytes_body_once": cost.get("bytes accessed", 0.0),
+        "hlo": ana,                            # per-device, expanded
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "collectives_body_once": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": shape.global_batch * (shape.seq_len
+                                        if shape.kind != "decode" else 1),
+    }
+    return rec
+
+
+def _shardings_for(args, cfg, shape, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def batch_sh(tree):
+        return sharding.batch_shardings(tree, mesh)
+
+    if shape.kind == "train":
+        params, opt, batch = args
+        return (sharding.param_shardings(params, mesh),
+                sharding.opt_state_shardings(opt, params, mesh),
+                batch_sh(batch))
+    if shape.kind == "prefill":
+        params, batch = args
+        return (sharding.param_shardings(params, mesh), batch_sh(batch))
+    params, tokens, caches, cache_len = args
+    return (sharding.param_shardings(params, mesh),
+            batch_sh(tokens),
+            sharding.cache_shardings(caches, mesh, shape.global_batch),
+            NamedSharding(mesh, P()))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--nmc-mode", default="none",
+                    choices=["none", "w8", "w8a8"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for sh in applicable_shapes(get(arch)):
+                cells.append((arch, sh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    for arch, sh in cells:
+        for mp in meshes:
+            tag = f"{arch}__{sh}__{'pod2' if mp else 'pod1'}"
+            if args.nmc_mode != "none":
+                tag += f"__{args.nmc_mode}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            out_path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(out_path):
+                print(f"[skip] {tag} (exists)")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                hlo_out = os.path.join(args.out, tag + ".hlo.gz") \
+                    if args.save_hlo else None
+                kw = {"seq_parallel": True} if args.seq_parallel else {}
+                if args.remat_policy != "full":
+                    kw["remat_policy"] = args.remat_policy
+                if args.kv_int8:
+                    kw["kv_cache_dtype"] = "int8"
+                rec = run_cell(arch, sh, mp, args.nmc_mode, args.tag,
+                               hlo_out=hlo_out, **kw)
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ncoll = sum(c["count"] for c in
+                            rec["hlo"]["collectives"].values())
+                print(f"  ok: {rec['compile_s']}s compile, "
+                      f"flops/dev={rec['hlo']['flops']:.3e}, "
+                      f"peak={rec['memory']['peak_bytes']/2**30:.2f} GiB, "
+                      f"coll_bytes/dev={rec['hlo']['collective_link_bytes']:.3e} "
+                      f"({ncoll:.0f} ops)", flush=True)
+            except Exception as e:
+                print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+                with open(out_path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+
+
+if __name__ == "__main__":
+    main()

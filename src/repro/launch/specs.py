@@ -1,0 +1,97 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStruct stand-ins
+for every (architecture x shape) cell — weak-type-correct, shardable, zero
+device allocation."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.configs.base import ShapeSpec
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+
+def abstract_params(cfg: ModelConfig, serve: bool = False):
+    p = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if serve and cfg.nmc_mode != "none":
+        # the paper's technique: serving params are int8-quantized (w_q +
+        # per-channel scales), produced once by serve.quantize_params
+        from repro.models import layers as L
+        p = jax.eval_shape(L.quantize_tree, p)
+        return p
+    if serve:  # baseline serving runs bf16 weights
+        p = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+            if x.dtype == jnp.float32 else x, p)
+    return p
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(adamw.init_state, params)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch / serving inputs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train" or shape.kind == "prefill":
+        batch = {}
+        s_text = s - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq,
+                                                    cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["images"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache_len": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Sliding-window archs keep a ring cache of `window` slots."""
+    if cfg.window is not None:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeSpec):
+    params = abstract_params(cfg, serve=True)
+    return jax.eval_shape(
+        lambda: lm.init_caches(params, cfg, shape.global_batch,
+                               cache_len_for(cfg, shape.seq_len),
+                               dtype=jnp.bfloat16))
+
+
+def cell_fn_and_inputs(cfg: ModelConfig, shape: ShapeSpec,
+                       opt_cfg: adamw.AdamWConfig | None = None):
+    """Returns (step_fn, abstract_args (tuple), donate_argnums)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if shape.kind == "train":
+        fn = step_lib.make_train_step(cfg, opt_cfg)
+        args = (abstract_params(cfg), abstract_opt_state(cfg),
+                input_specs(cfg, shape))
+        return fn, args, (0, 1)
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, batch, cfg, shape.seq_len)
+        return fn, (abstract_params(cfg, serve=True),
+                    input_specs(cfg, shape)), ()
+    # decode
+    def fn(params, tokens, caches, cache_len):
+        return lm.decode_step(params, tokens, caches, cache_len, cfg)
+    io = input_specs(cfg, shape)
+    args = (abstract_params(cfg, serve=True), io["tokens"],
+            abstract_caches(cfg, shape), io["cache_len"])
+    return fn, args, (2,)

@@ -1,0 +1,294 @@
+"""Attention layers: GQA (RoPE, optional bias/sliding-window) and MLA.
+
+Three execution modes, shared across all transformer families:
+  * train/prefill: blocked flash attention (Pallas on TPU, chunked-lax
+    fallback — never materializes S x S);
+  * decode: one-token attention against a donated KV cache;
+  * MLA keeps the *compressed* (kv_lora + rope) cache and uses the absorbed
+    formulation for decode — the cache stays (S, kv_lora+rope_dim) per token
+    instead of (S, H * (nope+v)), DeepSeek-V2's core memory win.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": L.linear_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": L.linear_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": L.linear_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": L.linear_init(ks[3], cfg.n_heads * hd, d),
+    }
+
+
+def gqa_qkv(p, x, cfg: ModelConfig, positions):
+    """x: (B, S, D) -> q (B,H,S,hd), k/v (B,KV,S,hd), rope applied."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = L.linear(p["wq"], x, nmc_mode=cfg.nmc_mode).reshape(
+        b, s, cfg.n_heads, hd)
+    k = L.linear(p["wk"], x, nmc_mode=cfg.nmc_mode).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], x, nmc_mode=cfg.nmc_mode).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    if not cfg.learned_pos:
+        cos, sin = L.rope_table(positions, hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, causal=True, q_offset=0,
+              kv=None) -> jax.Array:
+    """Train/prefill path.  `kv` overrides K/V (cross-attention)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + q_offset
+    q, k, v = gqa_qkv(p, x, cfg, positions)
+    if kv is not None:
+        k, v = kv
+    o = kops.attention(q, k, v, causal=causal, window=cfg.window,
+                       q_offset=q_offset)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return L.linear(p["wo"], o, nmc_mode=cfg.nmc_mode)
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache: dict, cache_len) -> tuple:
+    """One-token decode.  cache: {"k","v"}: (B, KV, S_cache, hd); cache_len
+    (B,) absolute lengths.  Sliding-window archs use a RING cache with
+    S_cache == window: slots hold the last `window` tokens (insertion at
+    (len-1) mod S_cache; softmax is permutation-invariant so slot order is
+    irrelevant, and RoPE is applied with absolute positions before insert).
+    Returns (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    positions = cache_len[:, None] - 1 + jnp.zeros((b, 1), jnp.int32)
+    q = L.linear(p["wq"], x, nmc_mode=cfg.nmc_mode).reshape(
+        b, 1, cfg.n_heads, cfg.head_dim)
+    k = L.linear(p["wk"], x, nmc_mode=cfg.nmc_mode).reshape(
+        b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = L.linear(p["wv"], x, nmc_mode=cfg.nmc_mode).reshape(
+        b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if not cfg.learned_pos:
+        cos, sin = L.rope_table(positions, cfg.head_dim, cfg.rope_theta)
+        q = L.apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+        k = L.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    q = q.transpose(0, 2, 1, 3)
+    s_cache = cache["k"].shape[2]
+    ring = cfg.window is not None and s_cache <= cfg.window
+    idx = (cache_len - 1) % s_cache                         # (B,)
+    new_cache = {}
+    if "k_s" in cache:                 # int8 quantized cache
+        kq, ks = _quant_kv(k.transpose(0, 2, 1, 3))
+        vq, vs = _quant_kv(v.transpose(0, 2, 1, 3))
+        new_cache["k"] = _cache_insert(cache["k"], kq, idx)
+        new_cache["v"] = _cache_insert(cache["v"], vq, idx)
+        new_cache["k_s"] = _cache_insert(cache["k_s"], ks, idx)
+        new_cache["v_s"] = _cache_insert(cache["v_s"], vs, idx)
+        kc = _dequant_kv(new_cache["k"], new_cache["k_s"], x.dtype)
+        vc = _dequant_kv(new_cache["v"], new_cache["v_s"], x.dtype)
+    else:
+        kc = _cache_insert(cache["k"], k.transpose(0, 2, 1, 3), idx)
+        vc = _cache_insert(cache["v"], v.transpose(0, 2, 1, 3), idx)
+        new_cache = {"k": kc, "v": vc}
+    if ring:
+        # every resident slot is within the window; mask only warmup slots
+        o = kops.decode_attention(q, kc, vc,
+                                  jnp.minimum(cache_len, s_cache),
+                                  window=None)
+    else:
+        o = kops.decode_attention(q, kc, vc, cache_len, window=cfg.window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    out = L.linear(p["wo"], o, nmc_mode=cfg.nmc_mode)
+    return out, new_cache
+
+
+def _cache_insert(cache, new, idx):
+    """cache (B,H,S,d) <- new (B,H,1,d) at per-batch position idx (B,)."""
+    b, h, s, d = cache.shape
+    oh = jax.nn.one_hot(idx, s, dtype=cache.dtype)          # (B, S)
+    return cache * (1 - oh[:, None, :, None]) + \
+        new.astype(cache.dtype) * oh[:, None, :, None]
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        # beyond-paper NMC extension: quantized decode state.  Per-token
+        # per-head scales; cache bytes halve vs bf16 (scales are hd x smaller)
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.bfloat16),
+                "v_s": jnp.zeros(sshape, jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quant_kv(x):
+    """(..., hd) -> int8 values + (..., 1) scale (symmetric per token/head)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
+    return q.astype(jnp.int8), s.astype(jnp.bfloat16)
+
+
+def _dequant_kv(q, s, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s.astype(jnp.float32)).astype(dtype)
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, max_len: int) -> tuple:
+    """Prefill: full attention over the prompt AND build the cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = gqa_qkv(p, x, cfg, positions)
+    o = kops.attention(q, k, v, causal=True, window=cfg.window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = L.linear(p["wo"], o, nmc_mode=cfg.nmc_mode)
+    pad = max_len - s
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant_kv(kp)
+        vq, vs = _quant_kv(vp)
+        return out, {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
+    cache = {"k": kp.astype(x.dtype), "v": vp.astype(x.dtype)}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    return {
+        "wq": L.linear_init(ks[0], d, h * (dn + dr)),
+        "w_dkv": L.linear_init(ks[1], d, r),            # compress
+        "w_krope": L.linear_init(ks[2], d, dr),         # shared rope key
+        "w_uk": L.linear_init(ks[3], r, h * dn),        # decompress K
+        "w_uv": L.linear_init(ks[4], r, h * dv),        # decompress V
+        "wo": L.linear_init(ks[5], h * dv, d),
+        "norm_ckv": L.rmsnorm_init(r),
+    }
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, q_offset=0) -> jax.Array:
+    """Train/prefill: expanded (flash-compatible) formulation."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.arange(s) + q_offset
+    cos, sin = L.rope_table(positions, dr, cfg.rope_theta)
+
+    q = L.linear(p["wq"], x, nmc_mode=cfg.nmc_mode).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, cos, sin)
+
+    ckv = L.rmsnorm(p["norm_ckv"],
+                    L.linear(p["w_dkv"], x, nmc_mode=cfg.nmc_mode))
+    k_nope = L.linear(p["w_uk"], ckv, nmc_mode=cfg.nmc_mode).reshape(
+        b, s, h, dn)
+    v = L.linear(p["w_uv"], ckv, nmc_mode=cfg.nmc_mode).reshape(b, s, h, dv)
+    k_rope = L.apply_rope(
+        L.linear(p["w_krope"], x, nmc_mode=cfg.nmc_mode)[:, :, None, :],
+        cos, sin)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, h, dr))
+
+    q_full = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+    k_full = jnp.concatenate([k_nope, k_rope], -1).transpose(0, 2, 1, 3)
+    v_t = v.transpose(0, 2, 1, 3)
+    o = kops.attention(q_full, k_full, v_t, causal=True, q_offset=q_offset)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    return L.linear(p["wo"], o, nmc_mode=cfg.nmc_mode)
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+
+
+def mla_prefill(p, x, cfg: ModelConfig, max_len: int) -> tuple:
+    b, s, _ = x.shape
+    out = mla_apply(p, x, cfg)
+    positions = jnp.arange(s)
+    cos, sin = L.rope_table(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    ckv = L.rmsnorm(p["norm_ckv"],
+                    L.linear(p["w_dkv"], x, nmc_mode=cfg.nmc_mode))
+    krope = L.apply_rope(
+        L.linear(p["w_krope"], x, nmc_mode=cfg.nmc_mode)[:, :, None, :],
+        cos, sin)[:, :, 0, :]
+    pad = max_len - s
+    cache = {
+        "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))).astype(x.dtype),
+        "krope": jnp.pad(krope, ((0, 0), (0, pad), (0, 0))).astype(x.dtype),
+    }
+    return out, cache
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache: dict, cache_len) -> tuple:
+    """Absorbed decode: attention runs in the compressed latent space —
+    per-token cache cost is kv_lora_rank + rope_dim, not H*(nope+v)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    positions = (cache_len - 1)[:, None]
+    cos, sin = L.rope_table(positions, dr, cfg.rope_theta)
+
+    q = L.linear(p["wq"], x, nmc_mode=cfg.nmc_mode).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+
+    ckv_new = L.rmsnorm(p["norm_ckv"],
+                        L.linear(p["w_dkv"], x, nmc_mode=cfg.nmc_mode))
+    krope_new = L.apply_rope(
+        L.linear(p["w_krope"], x, nmc_mode=cfg.nmc_mode)[:, :, None, :],
+        cos[:, :, None, :], sin[:, :, None, :])[:, :, 0, :]
+
+    idx = cache_len - 1
+    oh = jax.nn.one_hot(idx, cache["ckv"].shape[1], dtype=cache["ckv"].dtype)
+    ckv_c = cache["ckv"] * (1 - oh[..., None]) + \
+        ckv_new.astype(cache["ckv"].dtype) * oh[..., None]
+    krope_c = cache["krope"] * (1 - oh[..., None]) + \
+        krope_new.astype(cache["krope"].dtype) * oh[..., None]
+
+    # absorb W_uk into q: q_lat (B,H,r) = q_nope @ W_uk(per head)
+    w_uk = p["w_uk"]["w"].reshape(r, h, dn) if "w" in p["w_uk"] else (
+        p["w_uk"]["w_q"].astype(jnp.float32)
+        * p["w_uk"]["scale"][None, :]).reshape(r, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(dn + dr)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                         ckv_c.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                           krope_c.astype(jnp.float32))) * scale
+    mask = jnp.arange(ckv_c.shape[1])[None, :] < cache_len[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv_c.astype(jnp.float32))
+    w_uv = p["w_uv"]["w"].reshape(r, h, dv) if "w" in p["w_uv"] else (
+        p["w_uv"]["w_q"].astype(jnp.float32)
+        * p["w_uv"]["scale"][None, :]).reshape(r, h, dv)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dv).astype(x.dtype)
+    out = L.linear(p["wo"], o, nmc_mode=cfg.nmc_mode)
+    return out, {"ckv": ckv_c, "krope": krope_c}

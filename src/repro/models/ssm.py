@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) blocks — the MXU-friendly chunked matmul formulation.
+
+Train/prefill run the chunked *state-space dual* algorithm: within-chunk
+work is batched matmuls (quadratic in the chunk length only), across-chunk
+state is a short ``lax.scan`` — this is the TPU-native adaptation of the
+Mamba2 scan (no sequential per-token work, MXU-dominated).  Decode is the
+O(1) recurrent update against a donated (B, H, P, N) state.
+
+Tensor-parallel layout (DESIGN.md): every head owns an independent state
+slice — the same bank-per-lane independence NM-Carus exploits (Fig. 6).
+The z/x projections are column-sharded over `model` (heads local to shard),
+B/C/dt are small and replicated, the out-projection is row-sharded with one
+psum.  Projections are kept as separate linears so each shards cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def mamba2_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 9)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "in_z": L.linear_init(ks[0], d, di),
+        "in_x": L.linear_init(ks[1], d, di),
+        "in_b": L.linear_init(ks[2], d, n),
+        "in_c": L.linear_init(ks[3], d, n),
+        "in_dt": L.linear_init(ks[4], d, h),
+        "conv_x": {"w": 0.1 * jax.random.normal(ks[5], (cfg.ssm_conv, di),
+                                                jnp.float32),
+                   "b": jnp.zeros((di,), jnp.float32)},
+        "conv_bc": {"w": 0.1 * jax.random.normal(ks[6], (cfg.ssm_conv, 2 * n),
+                                                 jnp.float32),
+                    "b": jnp.zeros((2 * n,), jnp.float32)},
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[7], (h,), jnp.float32) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        "norm": L.rmsnorm_init(di),
+        "out_proj": L.linear_init(ks[8], di, d),
+    }
+
+
+def _proj(p, x, cfg: ModelConfig):
+    nmc = cfg.nmc_mode
+    z = L.shard_hidden(L.linear(p["in_z"], x, nmc_mode=nmc))
+    xs = L.shard_hidden(L.linear(p["in_x"], x, nmc_mode=nmc))
+    b = L.linear(p["in_b"], x, nmc_mode=nmc)
+    c = L.linear(p["in_c"], x, nmc_mode=nmc)
+    dt = L.linear(p["in_dt"], x, nmc_mode=nmc)
+    return z, xs, b, c, dt
+
+
+def _conv_full(cp, u: jax.Array, k: int) -> jax.Array:
+    """Causal depthwise conv over (B, S, C), silu."""
+    b, s, c = u.shape
+    w = cp["w"].astype(u.dtype)                 # (k, C)
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i:i + s, :] * w[i]
+    return jax.nn.silu(out + cp["b"].astype(u.dtype))
+
+
+def _conv_step(cp, window: jax.Array) -> jax.Array:
+    """window: (B, k, C) -> (B, 1, C)."""
+    w = cp["w"].astype(window.dtype)
+    return jax.nn.silu((window * w[None]).sum(axis=1, keepdims=True)
+                       + cp["b"].astype(window.dtype))
+
+
+def _ssd_chunked(xh, dt, A, b, c, chunk: int):
+    """SSD over chunks.  xh: (B,S,H,P); dt: (B,S,H) (post-softplus);
+    A: (H,) negative; b, c: (B,S,N) (single group, broadcast over heads).
+    Returns y (B,S,H,P) and the final state (B,H,P,N)."""
+    B_, S, H, P = xh.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    q = chunk
+    f32 = jnp.float32
+
+    xc = xh.reshape(B_, nc, q, H, P)
+    dtc = dt.reshape(B_, nc, q, H).astype(f32)
+    bc = b.reshape(B_, nc, q, N).astype(f32)
+    cc = c.reshape(B_, nc, q, N).astype(f32)
+    dA = dtc * A.astype(f32)                               # (B,nc,q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                           # (B,nc,q,H)
+
+    # within-chunk ("diagonal") term
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # (B,nc,q,q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,q,q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = (cb[..., None] * decay *
+              dtc[:, :, None, :, :]).astype(xh.dtype)      # (B,nc,q,q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # per-chunk final states
+    wj = (jnp.exp(cum[:, :, -1:, :] - cum) * dtc).astype(xh.dtype)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", wj, bc.astype(xh.dtype), xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        s_c, dec = inp                                     # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None].astype(carry.dtype) + s_c
+        return new, carry                                  # emit state *before*
+
+    init = jnp.zeros((B_, H, P, N), xh.dtype)
+    final, states_in = jax.lax.scan(
+        scan_fn, init, (s_chunk.transpose(1, 0, 2, 3, 4),
+                        chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+
+    # off-chunk contribution
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc.astype(xh.dtype),
+                       states_in, jnp.exp(cum).astype(xh.dtype))
+    y = (y_diag + y_off).reshape(B_, S, H, P)
+    return y, final
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence (train/prefill).  x: (B,S,D)."""
+    b_, s, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs_raw, bm_raw, cm_raw, dt = _proj(p, x, cfg)
+    xs = _conv_full(p["conv_x"], xs_raw, cfg.ssm_conv)
+    bc = _conv_full(p["conv_bc"], jnp.concatenate([bm_raw, cm_raw], -1),
+                    cfg.ssm_conv)
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b_, s, h, pdim)
+    y, state = _ssd_chunked(xh, dt, A, bmat, cmat, min(cfg.ssm_chunk, s))
+    y = y + (p["D"].astype(y.dtype)[None, None, :, None] * xh)
+    y = y.reshape(b_, s, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y, nmc_mode=cfg.nmc_mode)
+    if return_state:
+        k = cfg.ssm_conv - 1
+        conv_cache_x = xs_raw[:, -k:]
+        conv_cache_bc = jnp.concatenate([bm_raw, cm_raw], -1)[:, -k:]
+        return out, {"ssm": state, "conv_x": conv_cache_x,
+                     "conv_bc": conv_cache_bc}
+    return out
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                             dtype),
+    }
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, state: dict):
+    """One-token recurrent step.  x: (B,1,D)."""
+    b_ = x.shape[0]
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs_raw, bm_raw, cm_raw, dt = _proj(p, x, cfg)
+    bc_raw = jnp.concatenate([bm_raw, cm_raw], -1)
+    win_x = jnp.concatenate([state["conv_x"].astype(x.dtype), xs_raw], axis=1)
+    win_bc = jnp.concatenate([state["conv_bc"].astype(x.dtype), bc_raw],
+                             axis=1)
+    xs = _conv_step(p["conv_x"], win_x)
+    bc = _conv_step(p["conv_bc"], win_bc)
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                    # (B,H)
+    xh = xs.reshape(b_, h, pdim)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(xh.dtype),
+                     bmat[:, 0], xh)
+    s_new = state["ssm"] * dA[..., None, None].astype(state["ssm"].dtype) + dbx
+    y = jnp.einsum("bhpn,bn->bhp", s_new, cmat[:, 0])
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b_, 1, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y, nmc_mode=cfg.nmc_mode)
+    return out, {"ssm": s_new, "conv_x": win_x[:, 1:],
+                 "conv_bc": win_bc[:, 1:]}

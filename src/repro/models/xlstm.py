@@ -1,0 +1,238 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, sequential scan), following Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM trains with a chunkwise formulation (intra-chunk quadratic attention
+with log-gate decays + inter-chunk state recurrence — the same SSD shape as
+Mamba2, MXU-friendly).  sLSTM is inherently sequential (its recurrent gate
+input breaks parallelization) and runs as a ``lax.scan`` over time.  Both use
+exponential gating with the max-stabilizer state m_t.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.proj_factor_mlstm)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.rmsnorm_init(d),
+        "up": L.linear_init(ks[0], d, di),
+        "up_gate": L.linear_init(ks[1], d, di),
+        "wq": L.linear_init(ks[2], di, di),
+        "wk": L.linear_init(ks[3], di, di),
+        "wv": L.linear_init(ks[4], di, di),
+        "wi": L.linear_init(ks[5], di, h),        # input gate (per head)
+        "wf": L.linear_init(ks[6], di, h),        # forget gate (per head)
+        "out_norm": L.rmsnorm_init(di),
+        "down": L.linear_init(ks[7], di, d),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, log_i, log_f, chunk: int):
+    """q,k,v: (B,S,H,P); log_i/log_f: (B,S,H).  Stabilized chunkwise mLSTM.
+    Returns y (B,S,H,P) and final (C, n, m) state."""
+    B_, S, H, P = q.shape
+    nc = max(S // chunk, 1)
+    qc = q.reshape(B_, nc, chunk, H, P)
+    kc = k.reshape(B_, nc, chunk, H, P) / np.sqrt(P)
+    vc = v.reshape(B_, nc, chunk, H, P)
+    li = log_i.reshape(B_, nc, chunk, H).astype(jnp.float32)
+    lf = log_f.reshape(B_, nc, chunk, H).astype(jnp.float32)
+
+    cum_f = jnp.cumsum(lf, axis=2)                    # (B,nc,q,H)
+    total_f = cum_f[:, :, -1, :]                      # (B,nc,H)
+
+    # intra-chunk log weights: D[i,j] = (cum_f_i - cum_f_j) + li_j, j <= i
+    # (decay from j to i is sum_{l=j+1..i} lf_l = cum_f_i - cum_f_j)
+    dmat = cum_f[:, :, :, None, :] - cum_f[:, :, None, :, :] \
+        + li[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(causal[None, None, :, :, None], dmat, -jnp.inf)
+
+    def scan_fn(carry, inp):
+        (C, n, m) = carry                             # (B,H,P,P),(B,H,P),(B,H)
+        qb, kb, vb, lib, cfb, tfb, db = inp
+        # stabilizer for this chunk: running m
+        a_j = tfb[:, None, :] - cfb + lib             # (B,q,H) contribution lw
+        m_new = jnp.maximum(tfb + m, jnp.max(a_j, axis=1))      # (B,H)
+        # inter contribution to outputs: logits_i = cum_f_i + m - m_ref
+        inter_w = jnp.exp(cfb + m[:, None, :] - m_new[:, None, :])
+        y_inter = jnp.einsum("bqhp,bhpo,bqh->bqho", qb, C, inter_w)
+        n_inter = jnp.einsum("bqhp,bhp,bqh->bqh", qb, n, inter_w)
+        # intra contribution (stabilized by m_new)
+        w_intra = jnp.exp(db - m_new[:, None, None, :])         # (B,q,q,H)
+        s = jnp.einsum("bqhp,bjhp->bqjh", qb, kb)
+        y_intra = jnp.einsum("bqjh,bqjh,bjhp->bqhp", s, w_intra, vb)
+        n_intra = jnp.einsum("bqjh,bqjh->bqh", s, w_intra)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra),
+                            jnp.exp(-m_new)[:, None, :]) + 1e-6
+        y = (y_inter + y_intra) / denom[..., None]
+        # state update to chunk end
+        upd_w = jnp.exp(a_j - m_new[:, None, :])                # (B,q,H)
+        C_new = C * jnp.exp(tfb + m - m_new)[:, :, None, None] + \
+            jnp.einsum("bqh,bqhp,bqho->bhpo", upd_w, kb, vb)
+        n_new = n * jnp.exp(tfb + m - m_new)[:, :, None] + \
+            jnp.einsum("bqh,bqhp->bhp", upd_w, kb)
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B_, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B_, H, P), jnp.float32)
+    m0 = jnp.full((B_, H), -1e30, jnp.float32)
+    (C, n, m), ys = jax.lax.scan(
+        scan_fn, (C0, n0, m0),
+        (qc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         kc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         vc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         li.transpose(1, 0, 2, 3), cum_f.transpose(1, 0, 2, 3),
+         total_f.transpose(1, 0, 2), dmat.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, P)
+    return y.astype(q.dtype), (C, n, m)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, state=None, return_state=False):
+    """x: (B,S,D).  state (decode): (C, n, m)."""
+    b_, s, d = x.shape
+    di = int(d * cfg.proj_factor_mlstm)
+    h = cfg.n_heads
+    pdim = di // h
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    u = L.linear(p["up"], xn, nmc_mode=cfg.nmc_mode)
+    g = L.linear(p["up_gate"], xn, nmc_mode=cfg.nmc_mode, act="silu")
+    q = L.linear(p["wq"], u, nmc_mode=cfg.nmc_mode).reshape(b_, s, h, pdim)
+    k = L.linear(p["wk"], u, nmc_mode=cfg.nmc_mode).reshape(b_, s, h, pdim)
+    v = L.linear(p["wv"], u, nmc_mode=cfg.nmc_mode).reshape(b_, s, h, pdim)
+    log_i = L.linear(p["wi"], u).astype(jnp.float32)          # (B,S,H)
+    log_f = jax.nn.log_sigmoid(L.linear(p["wf"], u).astype(jnp.float32))
+
+    if state is not None:                       # decode: single step
+        y, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                   log_i[:, 0], log_f[:, 0], state)
+        y = y[:, None]
+    else:
+        y, new_state = _mlstm_core_chunked(q, k, v, log_i, log_f,
+                                           min(cfg.ssm_chunk or 64, s))
+    y = y.reshape(b_, s if state is None else 1, di)
+    y = L.rmsnorm(p["out_norm"], y, cfg.norm_eps) * g
+    out = x + L.linear(p["down"], y, nmc_mode=cfg.nmc_mode)
+    if return_state or state is not None:
+        return out, new_state
+    return out
+
+
+def _mlstm_step(q, k, v, log_i, log_f, state):
+    """Single-token mLSTM update.  q/k/v: (B,H,P); gates: (B,H)."""
+    C, n, m = state
+    pdim = q.shape[-1]
+    kf = k.astype(jnp.float32) / np.sqrt(pdim)
+    m_new = jnp.maximum(log_f + m, log_i)
+    C_new = C * jnp.exp(log_f + m - m_new)[..., None, None] + \
+        jnp.exp(log_i - m_new)[..., None, None] * \
+        jnp.einsum("bhp,bho->bhpo", kf, v.astype(jnp.float32))
+    n_new = n * jnp.exp(log_f + m - m_new)[..., None] + \
+        jnp.exp(log_i - m_new)[..., None] * kf
+    num = jnp.einsum("bhp,bhpo->bho", q.astype(jnp.float32), C_new)
+    den = jnp.abs(jnp.einsum("bhp,bhp->bh", q.astype(jnp.float32), n_new))
+    den = jnp.maximum(den, jnp.exp(-m_new)) + 1e-6
+    y = (num / den[..., None]).astype(q.dtype)
+    return y, (C_new, n_new, m_new)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    di = int(cfg.d_model * cfg.proj_factor_mlstm)
+    h = cfg.n_heads
+    pdim = di // h
+    return (jnp.zeros((batch, h, pdim, pdim), jnp.float32),
+            jnp.zeros((batch, h, pdim), jnp.float32),
+            jnp.full((batch, h), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    df = int(d * cfg.proj_factor_slstm)
+    ks = jax.random.split(key, 10)
+    p = {"norm": L.rmsnorm_init(d),
+         "ffn_norm": L.rmsnorm_init(d),
+         "up": L.linear_init(ks[8], d, 2 * df),
+         "down": L.linear_init(ks[9], df, d)}
+    for i, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = L.linear_init(ks[i], d, d)
+        # block-diagonal recurrent weights: (H, P, P)
+        h = cfg.n_heads
+        pdim = d // h
+        p[f"r_{gate}"] = 0.1 * jax.random.normal(ks[4 + i], (h, pdim, pdim),
+                                                 jnp.float32)
+    return p
+
+
+def slstm_apply(p, x, cfg: ModelConfig, state=None, return_state=False):
+    """x: (B,S,D); sequential scan over time (sLSTM is not parallelizable —
+    its recurrent gate input depends on h_{t-1})."""
+    b_, s, d = x.shape
+    h = cfg.n_heads
+    pdim = d // h
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    zx = L.linear(p["w_z"], xn).astype(jnp.float32)
+    ix = L.linear(p["w_i"], xn).astype(jnp.float32)
+    fx = L.linear(p["w_f"], xn).astype(jnp.float32)
+    ox = L.linear(p["w_o"], xn).astype(jnp.float32)
+
+    def gate_rec(r, hprev):                       # (H,P,P) x (B,H,P)
+        return jnp.einsum("hpo,bhp->bho", r, hprev)
+
+    def step(carry, inp):
+        c, n, m, hprev = carry
+        zxt, ixt, fxt, oxt = inp                  # (B,D) each
+        hp = hprev.reshape(b_, h, pdim)
+        z = jnp.tanh(zxt + gate_rec(p["r_z"], hp).reshape(b_, d))
+        i_raw = ixt + gate_rec(p["r_i"], hp).reshape(b_, d)
+        f_raw = fxt + gate_rec(p["r_f"], hp).reshape(b_, d)
+        o = jax.nn.sigmoid(oxt + gate_rec(p["r_o"], hp).reshape(b_, d))
+        log_f = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(log_f + m, i_raw)
+        c_new = c * jnp.exp(log_f + m - m_new) + jnp.exp(i_raw - m_new) * z
+        n_new = n * jnp.exp(log_f + m - m_new) + jnp.exp(i_raw - m_new)
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if state is None:
+        state = slstm_state_init(cfg, b_)
+    (c, n, m, hl), hs = jax.lax.scan(
+        step, state, (zx.transpose(1, 0, 2), ix.transpose(1, 0, 2),
+                      fx.transpose(1, 0, 2), ox.transpose(1, 0, 2)))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = x + y
+    # post-FFN (GEGLU-style up/down)
+    xf = L.rmsnorm(p["ffn_norm"], out, cfg.norm_eps)
+    u = L.linear(p["up"], xf, nmc_mode=cfg.nmc_mode)
+    df = u.shape[-1] // 2
+    out = out + L.linear(p["down"],
+                         jax.nn.gelu(u[..., :df]) * u[..., df:],
+                         nmc_mode=cfg.nmc_mode)
+    if return_state:
+        return out, (c, n, m, hl)
+    return out
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.full((batch, d), -1e30, jnp.float32),
+            jnp.zeros((batch, d), jnp.float32))

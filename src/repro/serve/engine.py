@@ -1,0 +1,133 @@
+"""Serving engine: prefill + decode with donated KV caches and continuous
+batching.
+
+The near-memory contract at the serving level: caches are donated buffers
+updated in place (memory-mode/compute-mode duality), and with
+``nmc_mode='w8a8'`` every projection runs the quantized int8 path
+(params converted once via ``quantize_params``).
+
+``ServeEngine`` implements slot-based continuous batching: a fixed decode
+batch of S slots; finished sequences free their slot, queued requests are
+prefilled into it (prefill at batch 1 here; production would chunk).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def quantize_params(params: dict, cfg: ModelConfig) -> dict:
+    """Convert trained params to the NMC int8 serving form (DESIGN.md B)."""
+    return L.quantize_tree(params)
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, caches, cache_len):
+        return lm.decode_step(params, tokens, caches, cache_len, cfg)
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out: Optional[list] = None
+
+
+class ServeEngine:
+    """Slot-based continuous batching on a single host (tests/examples)."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+        self.prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self.caches = lm.init_caches(params, cfg, n_slots, max_len,
+                                     dtype=cfg.dtype)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_len = np.zeros(n_slots, np.int32)
+        self.slot_remaining = np.zeros(n_slots, np.int32)
+        self.slot_last_tok = np.zeros(n_slots, np.int32)
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                logits, caches1 = self.prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                )
+                # copy the single-sequence cache into slot s
+                self.caches = jax.tree.map(
+                    lambda full, one: _insert_slot(full, one, s),
+                    self.caches, caches1)
+                tok = int(jnp.argmax(logits[0]))
+                req.out.append(tok)
+                self.slot_req[s] = req
+                self.slot_len[s] = len(req.prompt) + 1
+                self.slot_remaining[s] = req.max_new - 1
+                self.slot_last_tok[s] = tok
+
+    # -- decode loop ----------------------------------------------------------
+    def step(self):
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return False
+        toks = jnp.asarray(self.slot_last_tok[:, None])
+        clen = jnp.asarray(self.slot_len)
+        logits, self.caches = self.decode(self.params, toks, self.caches,
+                                          clen)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s in active:
+            req = self.slot_req[s]
+            req.out.append(int(nxt[s]))
+            self.slot_last_tok[s] = int(nxt[s])
+            self.slot_len[s] += 1
+            self.slot_remaining[s] -= 1
+            if self.slot_remaining[s] <= 0 or self.slot_len[s] >= self.max_len:
+                self.done.append(req)
+                self.slot_req[s] = None
+        return True
+
+    def run(self, max_steps: int = 1000):
+        steps = 0
+        while (self.queue or any(self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
+
+
+def _insert_slot(full, one, s: int):
+    """Write a batch-1 cache entry into slot s of the batched cache.  Works
+    for any leaf with the batch dim in position 1 (layer-stacked) or 0."""
+    if one.ndim >= 2 and one.shape[0] != 1 and one.shape[1] == 1:
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                                   s, axis=1)
+    return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                               s, axis=0)

@@ -1,0 +1,93 @@
+"""Train / eval step builders: loss -> grads -> AdamW, with microbatched
+gradient accumulation, optional int8 gradient compression on the cross-pod
+all-reduce, and donated (in-place) parameter/optimizer buffers — the
+memory/compute-mode duality of the paper applied to training state."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compress as gc
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_loss(cfg: ModelConfig):
+    def loss(params, batch):
+        return lm.loss_fn(params, batch, cfg)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    n_microbatches: int = 1,
+                    compress_grads: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Microbatching: the global batch is split on axis 0 and
+    accumulated with a lax.scan (constant-memory in n_microbatches)."""
+    loss_fn = make_loss(cfg)
+
+    def grads_of(params, batch):
+        (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return l, met, g
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_microbatches,
+                                     x.shape[0] // n_microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc_fn(acc, mbatch):
+                l, met, g = grads_of(params, mbatch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), met
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, total_l), mets = jax.lax.scan(
+                acc_fn, (zero_g, jnp.float32(0)), mb)
+            g = jax.tree.map(lambda x: x / n_microbatches, g)
+            loss = total_l / n_microbatches
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+        else:
+            loss, metrics, g = grads_of(params, batch)
+
+        if compress_grads:
+            # int8 + error feedback; the error state lives in opt_state
+            cg, new_err = gc.compress_tree(g, opt_state["grad_err"])
+            g = gc.decompress_tree(cg)
+            opt_state = dict(opt_state, grad_err=new_err)
+
+        err = opt_state.get("grad_err")
+        core = {k: opt_state[k] for k in ("m", "v", "step")}
+        new_params, new_core, opt_metrics = adamw.apply_updates(
+            params, g, core, opt_cfg)
+        new_state = dict(new_core)
+        if err is not None:
+            new_state["grad_err"] = err
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, compress_grads: bool = False):
+    params = lm.init_params(key, cfg)
+    opt_state = adamw.init_state(params)
+    if compress_grads:
+        opt_state["grad_err"] = gc.init_error_state(params)
+    return params, opt_state
+
+
+def make_eval_step(cfg: ModelConfig):
+    loss_fn = make_loss(cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step

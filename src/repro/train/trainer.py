@@ -1,0 +1,153 @@
+"""Fault-tolerant training loop.
+
+Production behaviours (exercised in tests/test_fault_tolerance.py):
+  * periodic async checkpoints (never blocks the step loop),
+  * automatic restart-from-latest on crash (any exception in a step triggers
+    restore + replay; the data pipeline is a pure function of step, so the
+    token stream is identical after restore),
+  * straggler detection: a rolling median of step times flags outliers
+    (> straggler_factor x median); mitigation hook logs and (at scale)
+    would trigger hot-spare swap — here it records the event,
+  * elastic resize: on a device-count change the loop re-builds the mesh,
+    re-shards state from the last checkpoint and continues (simulated by
+    runtime/elastic.py since this container has one device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, make_dataset
+from repro.distributed import context, sharding
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    n_microbatches: int = 1
+    compress_grads: bool = False
+    straggler_factor: float = 3.0
+    max_restarts: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 data_cfg: Optional[DataConfig] = None, mesh=None):
+        self.cfg = cfg
+        self.tc = tc
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=tc.total_steps)
+        self.data_cfg = data_cfg or DataConfig(global_batch=8, seq_len=128,
+                                               seed=tc.seed)
+        self.mesh = mesh
+        self.dataset = make_dataset("synthetic", self.data_cfg, cfg)
+        self.checkpointer = ckpt.AsyncCheckpointer(tc.ckpt_dir)
+        self.step_times: list[float] = []
+        self.straggler_events: list[int] = []
+        self.restarts = 0
+
+        fn = step_lib.make_train_step(cfg, self.opt_cfg,
+                                      tc.n_microbatches, tc.compress_grads)
+        if mesh is not None:
+            self._jit_step = None  # built lazily with shardings
+            self._raw_step = fn
+        else:
+            self._jit_step = jax.jit(fn, donate_argnums=(0, 1))
+            self._raw_step = fn
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self):
+        params, opt_state = step_lib.init_train_state(
+            jax.random.PRNGKey(self.tc.seed), self.cfg,
+            self.tc.compress_grads)
+        if self.mesh is not None:
+            pshard = sharding.param_shardings(params, self.mesh)
+            params = jax.device_put(params, pshard)
+        return params, opt_state, 0
+
+    def maybe_restore(self, params, opt_state):
+        last = ckpt.latest_step(self.tc.ckpt_dir)
+        if last is None:
+            return params, opt_state, 0
+        log.info("restoring from step %d", last)
+        tree = {"params": params, "opt": opt_state}
+        restored = ckpt.restore(self.tc.ckpt_dir, last, tree)
+        return restored["params"], restored["opt"], last
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, fail_at: Optional[int] = None) -> dict:
+        """Train to total_steps.  `fail_at` injects a crash once (tests)."""
+        params, opt_state, start = self.init_state()
+        params, opt_state, start = self.maybe_restore(params, opt_state)
+        step = start
+        metrics = {}
+        failed_once = False
+        while step < self.tc.total_steps:
+            try:
+                if fail_at is not None and step == fail_at and not failed_once:
+                    failed_once = True
+                    raise RuntimeError("injected node failure")
+                t0 = time.perf_counter()
+                batch = {k: jax.numpy.asarray(v) for k, v in
+                         self.dataset.batch_at(step).items()}
+                params, opt_state, metrics = self._step(params, opt_state,
+                                                        batch)
+                dt = time.perf_counter() - t0
+                self._straggler_check(step, dt)
+                step += 1
+                if step % self.tc.ckpt_every == 0 or \
+                        step == self.tc.total_steps:
+                    self.checkpointer.submit(
+                        step, {"params": params, "opt": opt_state})
+                if step % self.tc.log_every == 0:
+                    log.info("step %d loss %.4f (%.0f ms)", step,
+                             float(metrics["loss"]), dt * 1e3)
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                self.restarts += 1
+                if self.restarts > self.tc.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restarting from ckpt",
+                            step, e)
+                self.checkpointer.wait()
+                params, opt_state, step = self.init_state()
+                params, opt_state, step = self.maybe_restore(params,
+                                                             opt_state)
+        self.checkpointer.wait()
+        return {"final_step": step, "metrics": metrics,
+                "restarts": self.restarts,
+                "stragglers": list(self.straggler_events)}
+
+    def _step(self, params, opt_state, batch):
+        if self._jit_step is None:
+            with self.mesh:
+                return jax.jit(self._raw_step, donate_argnums=(0, 1))(
+                    params, opt_state, batch)
+        return self._jit_step(params, opt_state, batch)
+
+    def _straggler_check(self, step: int, dt: float):
+        self.step_times.append(dt)
+        hist = self.step_times[-50:]
+        if len(hist) >= 5:
+            med = float(np.median(hist))
+            if dt > self.tc.straggler_factor * med:
+                self.straggler_events.append(step)
+                log.warning("straggler at step %d: %.0f ms vs median %.0f ms"
+                            " — would trigger hot-spare mitigation", step,
+                            dt * 1e3, med * 1e3)

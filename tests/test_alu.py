@@ -1,0 +1,76 @@
+"""Property tests: packed-SIMD ALU semantics vs numpy two's-complement."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alu
+
+DTYPES = {8: np.int8, 16: np.int16, 32: np.int32}
+
+
+@st.composite
+def words_and_sew(draw):
+    sew = draw(st.sampled_from([8, 16, 32]))
+    n = draw(st.integers(1, 64)) * (32 // sew)
+    dt = DTYPES[sew]
+    info = np.iinfo(dt)
+    a = draw(st.lists(st.integers(info.min, info.max), min_size=n, max_size=n))
+    b = draw(st.lists(st.integers(info.min, info.max), min_size=n, max_size=n))
+    return sew, np.array(a, dt), np.array(b, dt)
+
+
+@given(words_and_sew())
+@settings(max_examples=60, deadline=None)
+def test_pack_unpack_roundtrip(data):
+    sew, a, _ = data
+    w = jnp.asarray(alu.pack_np(a))
+    back = alu.unpack_np(np.asarray(alu.pack(alu.unpack(w, sew), sew)),
+                         DTYPES[sew])
+    assert (back == a).all()
+
+
+@pytest.mark.parametrize("op", alu.BINOPS)
+@given(data=words_and_sew())
+@settings(max_examples=12, deadline=None)
+def test_binop_matches_numpy(op, data):
+    sew, a, b = data
+    dt = DTYPES[sew]
+    got = alu.unpack_np(
+        np.asarray(alu.word_binop(op, jnp.asarray(alu.pack_np(a)),
+                                  jnp.asarray(alu.pack_np(b)), sew)), dt)
+    ua, ub = a.astype(f"uint{sew}"), b.astype(f"uint{sew}")
+    sh = (ub % sew)
+    exp = {
+        "add": a + b, "sub": a - b, "mul": a * b,
+        "and": a & b, "or": a | b, "xor": a ^ b,
+        "min": np.minimum(a, b), "max": np.maximum(a, b),
+        "minu": np.where(ua <= ub, a, b), "maxu": np.where(ua >= ub, a, b),
+        "sll": (ua << sh).astype(dt), "srl": (ua >> sh).astype(dt),
+        "sra": a >> sh.astype(dt),
+    }[op]
+    assert (got == exp.astype(dt)).all()
+
+
+@given(words_and_sew())
+@settings(max_examples=30, deadline=None)
+def test_dot_wraps_mod_2_32(data):
+    sew, a, b = data
+    acc = alu.word_dot(jnp.int32(0), jnp.asarray(alu.pack_np(a)),
+                       jnp.asarray(alu.pack_np(b)), sew)
+    exp = np.int32(np.sum(a.astype(np.int64) * b.astype(np.int64))
+                   & 0xFFFFFFFF)
+    assert np.int32(acc) == exp
+
+
+def test_macc_accumulates_at_sew():
+    a = np.array([100, -100, 127, -128], np.int8)
+    b = np.array([100, 100, 2, 2], np.int8)
+    acc = np.array([1, 2, 3, 4], np.int8)
+    got = alu.unpack_np(
+        np.asarray(alu.word_macc(jnp.asarray(alu.pack_np(acc)),
+                                 jnp.asarray(alu.pack_np(a)),
+                                 jnp.asarray(alu.pack_np(b)), 8)), np.int8)
+    exp = (acc.astype(np.int64) + a.astype(np.int64) * b).astype(np.int8)
+    assert (got == exp).all()

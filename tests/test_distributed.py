@@ -1,0 +1,122 @@
+"""Distribution: sharding rules, multi-device execution (subprocess with 8
+fake devices so the main test process keeps its single-device view)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import base as cb
+from repro.distributed import sharding
+from repro.launch import specs as S
+from jax.sharding import PartitionSpec as P
+
+
+def test_param_specs_cover_all_archs():
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get(arch, smoke=True)
+        from repro.models import lm
+        params = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        specs = sharding.param_specs(params)
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        assert flat, arch
+        for path, spec in flat:
+            assert isinstance(spec, P), (arch, path)
+
+
+def test_col_row_rules():
+    params = {"wq": {"w": np.zeros((64, 128))},
+              "wo": {"w": np.zeros((128, 64)), "b": np.zeros(64)},
+              "norm": {"g": np.zeros(64)},
+              "moe": {"wi": np.zeros((8, 64, 96)),
+                      "router": {"w": np.zeros((64, 8))}}}
+    specs = sharding.param_specs(params)
+    assert specs["wq"]["w"] == P(None, "model")
+    assert specs["wo"]["w"] == P("model", None)
+    assert specs["wo"]["b"] == P(None)
+    assert specs["norm"]["g"] == P(None)
+    assert specs["moe"]["wi"] == P("model", None, None)
+    assert specs["moe"]["router"]["w"] == P(None, None)
+
+
+def test_divisibility_guard():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    # 51865 not divisible by anything > 1 relevant — spec survives on a
+    # 1-sized axis
+    fixed = sharding.fix_divisibility(P("model", None), (51865, 384), mesh)
+    assert fixed == P("model", None)
+
+
+_MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh, AxisType
+    import sys
+    sys.path.insert(0, "src")
+    from repro.configs import base as cb
+    from repro.distributed import context, sharding
+    from repro.optim import adamw
+    from repro.train import step as step_lib
+
+    arch = sys.argv[1]
+    cfg = cb.get(arch, smoke=True)
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"),
+                axis_types=(AxisType.Auto, AxisType.Auto))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (4, 32)))}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.normal(
+            size=(4, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        batch["images"] = jnp.asarray(rng.normal(
+            size=(4, cfg.n_img_tokens, cfg.d_model)).astype(np.float32))
+        batch["tokens"] = batch["tokens"][:, : 32 - cfg.n_img_tokens]
+
+    with context.use_mesh(mesh):
+        params, opt = step_lib.init_train_state(jax.random.PRNGKey(0), cfg)
+        pshard = sharding.param_shardings(params, mesh)
+        params = jax.device_put(params, pshard)
+        fn = jax.jit(step_lib.make_train_step(
+            cfg, adamw.AdamWConfig(total_steps=10)))
+        p2, o2, m = fn(params, opt, batch)
+        loss1 = float(m["loss"])
+        p2, o2, m = fn(p2, o2, batch)
+
+    # single-device reference of step 1
+    context.set_mesh(None)
+    params1, opt1 = step_lib.init_train_state(jax.random.PRNGKey(0), cfg)
+    fn1 = jax.jit(step_lib.make_train_step(
+        cfg, adamw.AdamWConfig(total_steps=10)))
+    _, _, m1 = fn1(params1, opt1, batch)
+    print(json.dumps({"loss_mesh": loss1, "loss_single": float(m1["loss"]),
+                      "loss2": float(m["loss"])}))
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "moonshot-v1-16b-a3b",
+                                  "zamba2-2.7b", "deepseek-v2-lite-16b"])
+def test_multidevice_train_step_matches_single(arch):
+    """2x4 mesh (DP x TP incl. MoE expert parallelism) must reproduce the
+    single-device loss — run in a subprocess so the fake-device XLA flag
+    doesn't leak into this process."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT, arch],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert abs(res["loss_mesh"] - res["loss_single"]) < 0.05, res
+    assert np.isfinite(res["loss2"])

@@ -1,0 +1,123 @@
+"""NM-Caesar / NM-Carus functional engines: bit-exact kernel verification,
+indirect register addressing, VL masking, and eCPU programmability."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alu, carus, caesar, ecpu, isa, programs
+from repro.core.isa import CaesarOp, VOp
+
+
+@pytest.mark.parametrize("name", programs.ALL_KERNELS)
+@pytest.mark.parametrize("sew", [8, 16, 32])
+def test_kernel_bit_exact_both_engines(name, sew):
+    # reduced sizes keep the scanned engines fast in CI
+    kw = {}
+    if name in ("xor", "add", "mul", "relu", "leaky_relu", "maxpool"):
+        kw = {"caesar_bytes": 2048, "carus_bytes": 4096}
+    kb = programs.build(name, sew, **kw)
+    res = programs.verify(kb)
+    assert res["caesar"], f"{name}/{sew}: Caesar mismatch"
+    assert res["carus"], f"{name}/{sew}: Carus mismatch"
+
+
+def test_indirect_equals_direct():
+    """The paper's indirect register addressing: same instruction template
+    with indices in a GPR must produce identical results to direct encoding."""
+    vpu = carus.CarusVPU()
+    rng = np.random.default_rng(0)
+    a = rng.integers(-128, 128, 1024, dtype=np.int8)
+    b = rng.integers(-128, 128, 1024, dtype=np.int8)
+    vrf = np.zeros((32, 256), np.int32)
+    vrf[1], vrf[2] = alu.pack_np(a), alu.pack_np(b)
+    direct = carus.trace_to_arrays([
+        carus.trace_entry(VOp.VSETVL, sval1=1024),
+        carus.trace_entry(VOp.VADD, vd=3, vs1=1, vs2=2, mode=isa.MODE_VV)])
+    indirect = carus.trace_to_arrays([
+        carus.trace_entry(VOp.VSETVL, sval1=1024),
+        carus.trace_entry(VOp.VADD, sval2=isa.pack_indices(3, 2, 1),
+                          mode=isa.MODE_VV | isa.MODE_INDIRECT)])
+    out1, _, _ = vpu.run_trace(jnp.asarray(vrf), direct, 8)
+    out2, _, _ = vpu.run_trace(jnp.asarray(vrf), indirect, 8)
+    assert (np.asarray(out1) == np.asarray(out2)).all()
+
+
+@given(vl=st.integers(1, 512), sew=st.sampled_from([8, 16, 32]))
+@settings(max_examples=12, deadline=None)
+def test_vl_tail_undisturbed(vl, sew):
+    """Elements at index >= VL must keep their previous value."""
+    vpu = carus.CarusVPU()
+    vlmax = vpu.cfg.vlmax(sew)
+    vl = min(vl, vlmax)
+    rng = np.random.default_rng(vl)
+    vrf = rng.integers(-2**31, 2**31, (32, 256)).astype(np.int32)
+    before = vrf[5].copy()
+    tr = carus.trace_to_arrays([
+        carus.trace_entry(VOp.VSETVL, sval1=vl),
+        carus.trace_entry(VOp.VXOR, vd=5, vs1=1, vs2=2, mode=isa.MODE_VV)])
+    out, _, _ = vpu.run_trace(jnp.asarray(vrf), tr, sew)
+    got = alu.unpack_np(np.asarray(out[5]), np.int8 if sew == 8 else
+                        np.int16 if sew == 16 else np.int32)
+    prev = alu.unpack_np(before, got.dtype)
+    assert (got[vl:] == prev[vl:]).all()
+
+
+def test_caesar_bus_encoding_roundtrip():
+    data, addr = isa.caesar_encode(CaesarOp.ADD, dest=7, src1=100, src2=4196)
+    op, dest, s1, s2 = isa.caesar_decode(data, addr)
+    assert (op, dest, s1, s2) == (CaesarOp.ADD, 7, 100, 4196)
+
+
+def test_xvnmc_encoding_roundtrip():
+    i = isa.VInstr(VOp.VMACC, True, 5, 3, isa.F3.OPIVX, 7)
+    d = isa.xvnmc_decode(isa.xvnmc_encode(i))
+    assert (d.funct6, d.indirect, d.vs2_f, d.vs1_f, d.funct3, d.vd_f) == \
+        (VOp.VMACC, True, 5, 3, isa.F3.OPIVX, 7)
+
+
+def test_ecpu_runs_assembled_indirect_loop():
+    """Full programmability: the Section III-B1 loop as real RV32E+xvnmc."""
+    src = """
+        li   a0, 4
+        li   t0, 1024
+        vsetvli t1, t0, e8
+        li   t2, 0x00140A00
+        li   a1, 0x00010101
+        li   t1, 0
+    loop:
+        xvnmc.vaddr.vv t2
+        add  t2, t2, a1
+        addi t1, t1, 1
+        blt  t1, a0, loop
+        halt
+    """
+    words = ecpu.assemble(src)
+    vpu = carus.CarusVPU()
+    rng = np.random.default_rng(1)
+    a = rng.integers(-128, 128, 4096, dtype=np.int8)
+    b = rng.integers(-128, 128, 4096, dtype=np.int8)
+    vrf = np.zeros((32, 256), np.int32)
+    for i in range(4):
+        vrf[i] = alu.pack_np(a[i * 1024:(i + 1) * 1024])
+        vrf[10 + i] = alu.pack_np(b[i * 1024:(i + 1) * 1024])
+    cpu = ecpu.ECpu(vpu, jnp.asarray(vrf))
+    cpu.load_program(words)
+    cpu.run()
+    got = np.concatenate([alu.unpack_np(np.asarray(cpu.vrf[20 + i]), np.int8)
+                          for i in range(4)])
+    assert (got == a + b).all()
+    assert cpu.vector_retired == 5   # vsetvli + 4 vadd
+
+
+def test_caesar_same_bank_timing_penalty():
+    from repro.core import timing
+    from repro.core.programs import EngineBuild
+    both_diff = EngineBuild([(CaesarOp.ADD, 10, 0, 4096)] * 10,
+                            np.zeros(8192, np.int32), (10, 1))
+    both_same = EngineBuild([(CaesarOp.ADD, 10, 0, 1)] * 10,
+                            np.zeros(8192, np.int32), (10, 1))
+    t1 = timing.caesar_cycles(both_diff)
+    t2 = timing.caesar_cycles(both_same)
+    assert t2.cycles - t1.cycles == 10  # +1 cycle per same-bank op

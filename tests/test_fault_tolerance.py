@@ -1,0 +1,92 @@
+"""Fault tolerance: crash/restart, straggler detection, elastic reshard."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import base as cb
+from repro.data.pipeline import DataConfig
+from repro.runtime.elastic import (HeartbeatMonitor, MembershipWatcher,
+                                   make_mesh_for, reshard_state)
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_restart_from_checkpoint_after_injected_failure(tmp_path):
+    """A node failure mid-run must restore the last committed step and
+    finish; the synthetic pipeline replays the identical stream."""
+    cfg = cb.get("qwen1.5-0.5b", smoke=True)
+    tc = TrainerConfig(total_steps=8, ckpt_every=2, log_every=100,
+                       ckpt_dir=str(tmp_path / "ck"))
+    tr = Trainer(cfg, tc, data_cfg=DataConfig(global_batch=4, seq_len=32))
+    out = tr.run(fail_at=5)
+    assert out["final_step"] == 8
+    assert out["restarts"] == 1
+    tr.checkpointer.close()
+
+    # bitwise-identical final params vs an uninterrupted run
+    cfg2 = cfg
+    tc2 = TrainerConfig(total_steps=8, ckpt_every=2, log_every=100,
+                        ckpt_dir=str(tmp_path / "ck2"))
+    tr2 = Trainer(cfg2, tc2, data_cfg=DataConfig(global_batch=4, seq_len=32))
+    out2 = tr2.run()
+    tr2.checkpointer.close()
+    a = ckpt.restore(str(tmp_path / "ck"), 8,
+                     {"params": tr.init_state()[0], "opt": tr.init_state()[1]})
+    b = ckpt.restore(str(tmp_path / "ck2"), 8,
+                     {"params": tr2.init_state()[0],
+                      "opt": tr2.init_state()[1]})
+    # failure at step 5 restores step 4 and replays 4..8 with the same data
+    for x, y in zip(jax.tree.leaves(a["params"]), jax.tree.leaves(b["params"])):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_straggler_detection():
+    cfg = cb.get("qwen1.5-0.5b", smoke=True)
+    tc = TrainerConfig(total_steps=1, straggler_factor=2.0)
+    tr = Trainer(cfg, tc, data_cfg=DataConfig(global_batch=2, seq_len=16))
+    for t in [0.1] * 10:
+        tr._straggler_check(0, t)
+    tr._straggler_check(11, 0.5)      # 5x median -> straggler
+    assert tr.straggler_events == [11]
+
+
+def test_heartbeat_monitor():
+    hb = HeartbeatMonitor(timeout_s=1.0)
+    hb.beat(0.0)
+    hb.beat(0.5)
+    hb.beat(5.0)       # gap > timeout
+    assert hb.failures == 1
+
+
+def test_membership_watcher_and_mesh_rebuild():
+    w = MembershipWatcher(events={3: 1})
+    assert w.poll(1) is None
+    v = w.poll(3)
+    assert v is not None and v.generation == 1
+    mesh = make_mesh_for(v.n_devices, model_parallel=1)
+    assert mesh.devices.size == 1
+
+
+def test_elastic_reshard_checkpoint(tmp_path):
+    """A checkpoint written under one 'cluster' restores onto a new mesh
+    (device_put onto fresh shardings) and training continues."""
+    from repro.distributed import sharding
+    cfg = cb.get("qwen1.5-0.5b", smoke=True)
+    tc = TrainerConfig(total_steps=2, ckpt_every=2, log_every=100,
+                       ckpt_dir=str(tmp_path / "ck"))
+    tr = Trainer(cfg, tc, data_cfg=DataConfig(global_batch=2, seq_len=16))
+    tr.run()
+    tr.checkpointer.close()
+
+    new_mesh = make_mesh_for(len(jax.devices()))
+    params0, opt0, _ = tr.init_state()
+    restored = ckpt.restore(str(tmp_path / "ck"), 2,
+                            {"params": params0, "opt": opt0})
+    resharded = reshard_state(
+        restored["params"], new_mesh,
+        lambda tree, m: sharding.param_shardings(tree, m))
+    # values preserved bit-exactly across the reshard
+    for x, y in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(resharded)):
+        assert (np.asarray(x) == np.asarray(y)).all()

@@ -1,0 +1,123 @@
+"""Serving engine: continuous batching, donated caches, NMC quantized mode."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.models import layers as L
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine, quantize_params
+
+
+def _greedy_reference(cfg, params, prompt, n_new):
+    """Step-by-step single-sequence greedy decode as ground truth."""
+    lg, caches = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                            cfg, max_len=128)
+    toks = [int(jnp.argmax(lg[0]))]
+    clen = jnp.asarray([len(prompt) + 1], jnp.int32)
+    for _ in range(n_new - 1):
+        lg, caches = lm.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), caches, clen, cfg)
+        toks.append(int(jnp.argmax(lg[0])))
+        clen = clen + 1
+    return toks
+
+
+def test_continuous_batching_matches_single_stream():
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 13, 7, 11)]   # more requests than slots
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=128)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=pr, max_new=6))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    for req in done:
+        ref = _greedy_reference(cfg, params, req.prompt, 6)
+        assert req.out == ref, (req.rid, req.out, ref)
+
+
+def test_nmc_quantized_serving_runs():
+    """The paper's technique end-to-end in serving: int8 NMC params."""
+    cfg = cb.get("qwen1.5-0.5b", smoke=True).scaled(nmc_mode="w8a8")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, cfg)
+    # all 2-D linears converted
+    leaves = jax.tree_util.tree_flatten_with_path(qparams)[0]
+    assert any("w_q" in str(p) for p, _ in leaves)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng = ServeEngine(cfg, qparams, n_slots=1, max_len=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 4
+
+
+def test_cache_donation_shapes_stable():
+    cfg = cb.get("qwen1.5-0.5b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=32)
+    shapes_before = jax.tree.map(lambda x: x.shape, eng.caches)
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new=3))
+    eng.run()
+    shapes_after = jax.tree.map(lambda x: x.shape, eng.caches)
+    assert shapes_before == shapes_after
+
+def test_int8_kv_cache_close_to_bf16():
+    """Beyond-paper NMC extension: int8 KV cache (per-token/head scales)
+    must track the bf16 cache's logits closely under teacher forcing."""
+    import jax.numpy as jnp
+    from repro.configs import base as cb
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32)
+    cfg8 = cfg.scaled(kv_cache_dtype="int8")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 12)))
+    forced = rng.integers(0, cfg.vocab_size, (5, 2)).astype(np.int32)
+    logit_traces = {}
+    for name, c in (("bf16", cfg), ("int8", cfg8)):
+        lg, caches = lm.prefill(params, {"tokens": toks}, c, max_len=32)
+        clen = jnp.full((2,), 13, jnp.int32)
+        trace = [lg]
+        for t in range(5):                      # same forced continuation
+            tok = jnp.asarray(forced[t][:, None])
+            lg, caches = lm.decode_step(params, tok, caches, clen, c)
+            clen = clen + 1
+            trace.append(lg)
+        logit_traces[name] = jnp.stack(trace)
+        if name == "int8":
+            assert caches["layers"]["k"].dtype == jnp.int8
+    scale = float(jnp.std(logit_traces["bf16"]))
+    err = float(jnp.max(jnp.abs(logit_traces["bf16"]
+                                - logit_traces["int8"])))
+    assert err < 0.15 * scale, (err, scale)
+
+
+def test_moe_expert_quantization():
+    """NMC w8 on MoE expert banks: router stays fp (routing margins are
+    below int8 noise), experts quantize per-(expert, out-channel)."""
+    import jax.numpy as jnp
+    from repro.configs import base as cb
+    cfg = cb.get("moonshot-v1-16b-a3b", smoke=True).scaled(dtype=jnp.float32)
+    p = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)))}
+    base, _ = lm.forward(p, batch, cfg)
+    qp = quantize_params(p, cfg)
+    flat = jax.tree_util.tree_flatten_with_path(qp)[0]
+    assert any("wi_q" in str(path) for path, _ in flat)
+    assert any("router" in str(path) and "'w'" in str(path)
+               for path, _ in flat)          # router NOT quantized
+    qcfg = cfg.scaled(nmc_mode="w8")
+    qlog, _ = lm.forward(qp, batch, qcfg)
+    agree = float((jnp.argmax(base, -1) == jnp.argmax(qlog, -1)).mean())
+    assert agree > 0.85, agree
+    # decode path runs with quantized experts
+    lg, caches = lm.prefill(qp, batch, qcfg, max_len=32)
+    lg2, _ = lm.decode_step(qp, jnp.argmax(lg, -1)[:, None].astype(jnp.int32),
+                            caches, jnp.full((2,), 17, jnp.int32), qcfg)
+    assert np.isfinite(np.asarray(lg2)).all()

@@ -1,0 +1,66 @@
+"""Paper-validation as a test: the calibrated timing/energy models must
+track Table V / Table VIII / Fig 12 within documented tolerances."""
+
+import statistics
+
+import pytest
+
+from benchmarks import paper_data as PD
+from benchmarks import table_v, table_viii, fig12
+from repro.core import constants as C
+
+
+@pytest.fixture(scope="module")
+def table_v_rows():
+    return table_v.run(verify_functional=False)
+
+
+def test_table_v_aggregate_error(table_v_rows):
+    errs = []
+    for r in table_v_rows:
+        for k in ("thr_caesar_err", "thr_carus_err", "en_caesar_err",
+                  "en_carus_err"):
+            if not (r["erratum_carus"] and k == "en_carus_err"):
+                errs.append(abs(r[k]))
+    assert statistics.mean(errs) < 0.10, statistics.mean(errs)
+    assert statistics.median(errs) < 0.05
+
+
+def test_table_v_headline_cells(table_v_rows):
+    """The paper's headline claims: 28x/53.9x speedup, 25x/35.6x energy."""
+    r = next(x for x in table_v_rows
+             if x["kernel"] == "matmul" and x["sew"] == 8)
+    assert abs(r["thr_caesar"] / 28.0 - 1) < 0.05
+    assert abs(r["thr_carus"] / 53.9 - 1) < 0.06
+    assert abs(r["en_caesar"] / 25.0 - 1) < 0.06
+    assert abs(r["en_carus"] / 35.6 - 1) < 0.06
+
+
+def test_table_viii_cycles_within_5pct():
+    for r in table_viii.run():
+        assert abs(r["caesar_cycles"] / r["caesar_cycles_paper"] - 1) < 0.05
+        assert abs(r["carus_cycles"] / r["carus_cycles_paper"] - 1) < 0.05
+
+
+def test_fig12_saturation_and_crossover():
+    rows = fig12.run()
+    sat = rows[-1]
+    assert abs(sat["carus_out_per_cyc"] / PD.FIG12_CARUS_SAT_OUT_PER_CYC
+               - 1) < 0.05
+    assert abs(sat["caesar_out_per_cyc"] / PD.FIG12_CAESAR_SAT_OUT_PER_CYC
+               - 1) < 0.02
+    # eCPU bootstrap makes Carus lose at tiny sizes (Fig 12 discussion)
+    small = rows[0]
+    assert small["caesar_out_per_cyc"] > small["carus_out_per_cyc"]
+    # monotone saturation
+    thr = [r["carus_out_per_cyc"] for r in rows]
+    assert all(b >= a - 1e-9 for a, b in zip(thr, thr[1:]))
+
+
+def test_peak_throughput_identities():
+    """Table VII peak GOPS fall out of the microarchitecture constants."""
+    assert C.CARUS_PEAK_GOPS == pytest.approx(
+        C.CARUS_N_LANES * 2 * C.F_CLK_MAX_HZ / 1e9, rel=0.01)
+    # Caesar: one word-wise DOT (4 MACs) per 2 cycles = 2 MAC/cyc = 4 ops/cyc
+    assert C.CAESAR_PEAK_GOPS == pytest.approx(
+        4 * C.F_CLK_MAX_HZ / 1e9, rel=0.01)
