@@ -9,13 +9,20 @@ crossover (Caesar beats Carus at small P because of the eCPU bootstrap).
 from __future__ import annotations
 
 from repro.core import energy, programs, timing
+from repro.nmc.pool import TilePool
 from benchmarks import paper_data as PD
 
 
-def run(sew: int = 8) -> list[dict]:
+def run(sew: int = 8, verify: bool = False,
+        pool: TilePool | None = None) -> list[dict]:
+    kbs = [programs.build_matmul(sew, p=p, seed=11)
+           for p in (8, 16, 32, 64, 128, 256, 512, 1024)]
+    if verify:
+        # whole P-sweep through the batched tile pool, bit-exact
+        res = programs.verify_sweep(kbs, pool or TilePool())
+        assert all(all(v.values()) for v in res.values()), res
     rows = []
-    for p in (8, 16, 32, 64, 128, 256, 512, 1024):
-        kb = programs.build_matmul(sew, p=p, seed=11)
+    for p, kb in zip((8, 16, 32, 64, 128, 256, 512, 1024), kbs):
         t = timing.kernel_timing(kb)
         e = energy.kernel_energy(kb)
         rows.append({

@@ -4,30 +4,45 @@ Prints a ``name,us_per_call,derived`` CSV line per benchmark (the harness
 contract), followed by each benchmark's detail table.  The NMC engines run
 at f_clk = 250 MHz (the paper's benchmarking frequency), so us_per_call is
 the modeled wall-clock of the 8-bit matmul kernel on each target.
+
+All functional sweeps dispatch through one shared
+:class:`repro.nmc.pool.TilePool` — the jit-cache/compile stats it reports
+verify the one-compile-per-program-shape property of the batched executor.
+
+Run from the repo root as ``PYTHONPATH=src python -m benchmarks.run``
+(pytest picks up ``src`` automatically via pyproject.toml).  Pass ``--smoke``
+for the reduced CI subset.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import statistics
 import sys
 import time
 
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-sys.path.insert(0, os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
-
-def main() -> None:
+def main(smoke: bool = False) -> None:
     from repro.core import constants as C
-    from repro.core import energy, programs, timing
+    from repro.core import programs, timing
+    from repro.nmc.pool import TilePool
     from benchmarks import fig12, table_v, table_vi, table_viii
 
+    pool = TilePool()
     lines = []
 
     # -- Table V ------------------------------------------------------------
+    kernels = ("xor", "matmul", "maxpool") if smoke else programs.ALL_KERNELS
+    sews = (8,) if smoke else table_v.ALL_SEWS
     t0 = time.perf_counter()
-    rows_v = table_v.run(verify_functional=True)
+    rows_v = table_v.run(verify_functional=True, kernels=kernels, sews=sews,
+                         pool=pool)
+    sweep_wall_s = time.perf_counter() - t0
+    # snapshot the pool counters here so the nmc_tile_pool line reports the
+    # Table V sweep only (fig12 shares the pool below)
+    sweep_stats = (pool.programs_run, pool.dispatches, pool.compiles,
+                   len(pool.shape_keys_compiled))
     errs = []
     for r in rows_v:
         for k in ("thr_caesar_err", "thr_carus_err", "en_caesar_err",
@@ -44,54 +59,63 @@ def main() -> None:
     lines.append(("table_v_matmul8_carus", us_carus,
                   f"median_abs_err={100*statistics.median(errs):.1f}%"))
 
-    # -- Table VI -----------------------------------------------------------
-    ok = table_vi.functional_demo()
-    rows_vi = table_vi.run()
-    carus_row = next(r for r in rows_vi if r["config"] == "carus_e20")
-    lines.append(("table_vi_anomaly_carus",
-                  carus_row["model_cycles"] / C.F_CLK_BENCH_HZ * 1e6,
-                  f"functional={'bitexact' if ok else 'FAIL'},"
-                  f"cycle_factor={carus_row['model_cycle_factor']:.2f}"
-                  f"_vs_paper_{carus_row['paper_cycle_factor']}"))
-
-    # -- Table VIII ---------------------------------------------------------
-    rows_viii = table_viii.run()
-    pk = table_viii.peak_efficiency_gops_w()
-    lines.append(("table_viii_matmul8_carus",
-                  rows_viii[0]["carus_cycles"] / C.F_CLK_BENCH_HZ * 1e6,
-                  f"pj_per_mac={rows_viii[0]['carus_pj_mac']:.1f}"
-                  f"_paper_{rows_viii[0]['carus_pj_mac_paper']}"))
-    lines.append(("table_vii_peak_gops_w", 0.0,
-                  f"model={pk['model_gops_w']:.1f}_paper="
-                  f"{pk['paper_gops_w']}"))
-
     # -- Fig 12 ---------------------------------------------------------------
-    rows_12 = fig12.run()
+    rows_12 = fig12.run(verify=smoke, pool=pool)
     sat = rows_12[-1]
     lines.append(("fig12_saturation", 0.0,
                   f"carus_out_per_cyc={sat['carus_out_per_cyc']:.3f}"
                   f"_paper_0.48"))
 
-    # -- Fig 13 ---------------------------------------------------------------
-    from benchmarks import fig13
-    bd = fig13.run(8)
-    vrf_frac = bd["carus"]["vrf"] / sum(bd["carus"].values())
-    lines.append(("fig13_power_breakdown", 0.0,
-                  f"carus_vrf_share={vrf_frac:.2f}_paper_~0.6"))
+    # -- Tile pool (batched multi-tile executor) ------------------------------
+    # Table V sweep only: us_per_call is sweep wall-clock per program, and
+    # the counters are the snapshot taken right after that sweep
+    programs_n, dispatches_n, compiles_n, shapes_n = sweep_stats
+    lines.append(("nmc_tile_pool", sweep_wall_s * 1e6 / max(programs_n, 1),
+                  f"programs={programs_n},dispatches={dispatches_n},"
+                  f"compiles={compiles_n},shapes={shapes_n}"))
 
-    # -- Roofline (reads dry-run artifacts if present) ------------------------
-    try:
-        from benchmarks import roofline
-        rows_rf = roofline.main(out_csv="results/roofline.csv") \
-            if os.path.isdir("results/dryrun") else []
-        if rows_rf:
-            worst = min((r for r in rows_rf if r["shape"] == "train_4k"),
-                        key=lambda r: r["mfu_bound"])
-            lines.append(("roofline_cells", 0.0,
-                          f"n={len(rows_rf)},worst_train_mfu_bound="
-                          f"{worst['mfu_bound']:.3f}@{worst['arch']}"))
-    except Exception as e:  # roofline needs dry-run artifacts
-        lines.append(("roofline_cells", 0.0, f"skipped:{type(e).__name__}"))
+    if not smoke:
+        # -- Table VI -------------------------------------------------------
+        ok = table_vi.functional_demo()
+        rows_vi = table_vi.run()
+        carus_row = next(r for r in rows_vi if r["config"] == "carus_e20")
+        lines.append(("table_vi_anomaly_carus",
+                      carus_row["model_cycles"] / C.F_CLK_BENCH_HZ * 1e6,
+                      f"functional={'bitexact' if ok else 'FAIL'},"
+                      f"cycle_factor={carus_row['model_cycle_factor']:.2f}"
+                      f"_vs_paper_{carus_row['paper_cycle_factor']}"))
+
+        # -- Table VIII -------------------------------------------------------
+        rows_viii = table_viii.run()
+        pk = table_viii.peak_efficiency_gops_w()
+        lines.append(("table_viii_matmul8_carus",
+                      rows_viii[0]["carus_cycles"] / C.F_CLK_BENCH_HZ * 1e6,
+                      f"pj_per_mac={rows_viii[0]['carus_pj_mac']:.1f}"
+                      f"_paper_{rows_viii[0]['carus_pj_mac_paper']}"))
+        lines.append(("table_vii_peak_gops_w", 0.0,
+                      f"model={pk['model_gops_w']:.1f}_paper="
+                      f"{pk['paper_gops_w']}"))
+
+        # -- Fig 13 -----------------------------------------------------------
+        from benchmarks import fig13
+        bd = fig13.run(8)
+        vrf_frac = bd["carus"]["vrf"] / sum(bd["carus"].values())
+        lines.append(("fig13_power_breakdown", 0.0,
+                      f"carus_vrf_share={vrf_frac:.2f}_paper_~0.6"))
+
+        # -- Roofline (reads dry-run artifacts if present) --------------------
+        try:
+            from benchmarks import roofline
+            rows_rf = roofline.main(out_csv="results/roofline.csv") \
+                if os.path.isdir("results/dryrun") else []
+            if rows_rf:
+                worst = min((r for r in rows_rf if r["shape"] == "train_4k"),
+                            key=lambda r: r["mfu_bound"])
+                lines.append(("roofline_cells", 0.0,
+                              f"n={len(rows_rf)},worst_train_mfu_bound="
+                              f"{worst['mfu_bound']:.3f}@{worst['arch']}"))
+        except Exception as e:  # roofline needs dry-run artifacts
+            lines.append(("roofline_cells", 0.0, f"skipped:{type(e).__name__}"))
 
     print("\n" + "=" * 60)
     print("name,us_per_call,derived")
@@ -100,4 +124,14 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if __package__ in (None, ""):
+        # direct-script invocation (`python benchmarks/run.py`): bootstrap
+        # the same import roots `python -m benchmarks.run` gets from the
+        # repo root + pyproject; a no-op under `-m` or an installed package.
+        _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sys.path.insert(0, _root)
+        sys.path.insert(0, os.path.join(_root, "src"))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI subset (Table V @ sew=8 + Fig 12)")
+    main(smoke=ap.parse_args().smoke)

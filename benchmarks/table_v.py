@@ -3,51 +3,66 @@
 Runs every kernel x bitwidth functionally (bit-exact check on both engines),
 derives cycles/energy from the calibrated mechanistic models, and compares
 the improvement factors against the paper's published Table V.
+
+The functional sweep dispatches through a :class:`repro.nmc.pool.TilePool`:
+all (kernel x SEW x engine) instances are batched by program shape and run
+as vmapped multi-tile groups — one XLA compile per ``(engine, sew, n_instr)``
+shape instead of one per kernel instance.
 """
 
 from __future__ import annotations
 
 from repro.core import energy, programs, timing
+from repro.nmc.pool import TilePool
 from benchmarks import paper_data as PD
 
+ALL_SEWS = (8, 16, 32)
 
-def run(verify_functional: bool = True) -> list[dict]:
+
+def run(verify_functional: bool = True,
+        kernels: tuple = programs.ALL_KERNELS,
+        sews: tuple = ALL_SEWS,
+        pool: TilePool | None = None) -> list[dict]:
+    kbs = [programs.build(name, sew) for name in kernels for sew in sews]
+    func_ok: dict = {}
+    if verify_functional:
+        pool = pool or TilePool()
+        func_ok = programs.verify_sweep(kbs, pool)
+        bad = {k: v for k, v in func_ok.items() if not all(v.values())}
+        assert not bad, bad
     rows = []
-    for name in programs.ALL_KERNELS:
-        for sew in (8, 16, 32):
-            kb = programs.build(name, sew)
-            func_ok = {"caesar": None, "carus": None}
-            if verify_functional:
-                func_ok = programs.verify(kb)
-                assert all(func_ok.values()), (name, sew, func_ok)
-            t = timing.kernel_timing(kb)
-            e = energy.kernel_energy(kb)
-            cpu_cpo = t["cpu"].total_cycles / kb.n_outputs
-            cpu_epo = e["cpu"].energy_pj / kb.n_outputs
-            row = {"kernel": name, "sew": sew,
-                   "functional_ok": all(v for v in func_ok.values() if v
-                                        is not None)}
-            for eng in ("caesar", "carus"):
-                nout = getattr(kb, eng).n_outputs
-                thr = cpu_cpo / (t[eng].total_cycles / nout)
-                en = cpu_epo / (e[eng].energy_pj / nout)
-                p_thr, p_en = (PD.TABLE_V_THROUGHPUT[name][sew],
-                               PD.TABLE_V_ENERGY[name][sew])
-                i = 0 if eng == "caesar" else 1
-                row[f"thr_{eng}"] = thr
-                row[f"thr_{eng}_paper"] = p_thr[i]
-                row[f"thr_{eng}_err"] = thr / p_thr[i] - 1
-                row[f"en_{eng}"] = en
-                row[f"en_{eng}_paper"] = p_en[i]
-                row[f"en_{eng}_err"] = en / p_en[i] - 1
-                row[f"erratum_{eng}"] = (name, sew, eng, "energy") in \
-                    PD.SUSPECTED_ERRATA
-            rows.append(row)
+    for kb in kbs:
+        name, sew = kb.name, kb.sew
+        ok = func_ok.get((name, sew), {"caesar": None, "carus": None})
+        t = timing.kernel_timing(kb)
+        e = energy.kernel_energy(kb)
+        cpu_cpo = t["cpu"].total_cycles / kb.n_outputs
+        cpu_epo = e["cpu"].energy_pj / kb.n_outputs
+        row = {"kernel": name, "sew": sew,
+               "functional_ok": all(v for v in ok.values() if v
+                                    is not None)}
+        for eng in ("caesar", "carus"):
+            nout = getattr(kb, eng).n_outputs
+            thr = cpu_cpo / (t[eng].total_cycles / nout)
+            en = cpu_epo / (e[eng].energy_pj / nout)
+            p_thr, p_en = (PD.TABLE_V_THROUGHPUT[name][sew],
+                           PD.TABLE_V_ENERGY[name][sew])
+            i = 0 if eng == "caesar" else 1
+            row[f"thr_{eng}"] = thr
+            row[f"thr_{eng}_paper"] = p_thr[i]
+            row[f"thr_{eng}_err"] = thr / p_thr[i] - 1
+            row[f"en_{eng}"] = en
+            row[f"en_{eng}_paper"] = p_en[i]
+            row[f"en_{eng}_err"] = en / p_en[i] - 1
+            row[f"erratum_{eng}"] = (name, sew, eng, "energy") in \
+                PD.SUSPECTED_ERRATA
+        rows.append(row)
     return rows
 
 
 def main():
-    rows = run()
+    pool = TilePool()
+    rows = run(pool=pool)
     print(f"{'kernel':12s} sew | thrC model/paper | thrK model/paper |"
           f" enC model/paper | enK model/paper")
     errs = []
@@ -67,6 +82,9 @@ def main():
           f"mean |err| {100*statistics.mean(errs):.1f}%, "
           f"median {100*statistics.median(errs):.1f}%, "
           f"max {100*max(errs):.1f}%")
+    print(f"tile pool: {pool.programs_run} programs in {pool.dispatches} "
+          f"batched dispatches, {pool.compiles} compiles "
+          f"({len(pool.shape_keys_compiled)} distinct program shapes)")
     return rows
 
 

@@ -1,6 +1,9 @@
 """The paper's core: NMC functional simulators, ISA, timing & energy models.
 
 Layer A of DESIGN.md — the faithful reproduction of NM-Caesar / NM-Carus.
+Engine programs are represented in the unified IR of :mod:`repro.nmc`
+(DESIGN.md §5); the builders in :mod:`repro.core.programs` emit it and the
+timing/energy models cost it through one code path.
 """
 
 from repro.core import alu, constants, isa

@@ -19,6 +19,9 @@ import numpy as np
 
 SEWS = (8, 16, 32)
 
+# canonical SEW -> numpy dtype map (shared by builders, engines, tests)
+NP_DTYPES = {8: np.int8, 16: np.int16, 32: np.int32}
+
 
 def lanes_per_word(sew: int) -> int:
     assert sew in SEWS, f"unsupported SEW {sew}"

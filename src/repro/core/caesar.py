@@ -57,6 +57,11 @@ class CaesarEngine:
     def __init__(self, config: CaesarConfig | None = None):
         self.cfg = config or CaesarConfig()
 
+    def run_program(self, mem: jax.Array, program):
+        """Execute a unified-IR :class:`repro.nmc.program.Program`."""
+        assert program.engine == "caesar", program.engine
+        return self.run_stream(mem, program.lower(), program.sew)
+
     @functools.partial(jax.jit, static_argnames=("self", "sew"))
     def run_stream(self, mem: jax.Array, stream: dict, sew: int):
         """Execute an instruction stream.  Returns (mem, mac_acc, dot_acc)."""

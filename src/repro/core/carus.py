@@ -46,11 +46,9 @@ class CarusConfig:
 
 
 # Compact opcode ids used by the scanned executor (dense for lax.switch).
-_COMPACT = [VOp.VADD, VOp.VSUB, VOp.VMUL, VOp.VMACC, VOp.VAND, VOp.VOR,
-            VOp.VXOR, VOp.VMIN, VOp.VMINU, VOp.VMAX, VOp.VMAXU, VOp.VSLL,
-            VOp.VSRL, VOp.VSRA, VOp.VMV, VOp.VSLIDEUP, VOp.VSLIDEDOWN,
-            VOp.EMVV, VOp.EMVX, VOp.VSETVL]
-COMPACT_ID = {op: i for i, op in enumerate(_COMPACT)}
+# Canonical table lives in repro.core.isa; kept as aliases for back-compat.
+_COMPACT = list(isa.VOP_COMPACT)
+COMPACT_ID = isa.COMPACT_ID
 _ARITH_BY_ID = {COMPACT_ID[k]: v for k, v in isa.ARITH_OPS.items()}
 
 
@@ -79,6 +77,11 @@ class CarusVPU:
 
     def words_from_vrf(self, vrf: jax.Array) -> jax.Array:
         return vrf.reshape(-1)
+
+    def run_program(self, vrf: jax.Array, program, vl0=None):
+        """Execute a unified-IR :class:`repro.nmc.program.Program`."""
+        assert program.engine == "carus", program.engine
+        return self.run_trace(vrf, program.lower(), program.sew, vl0=vl0)
 
     # -- execution -------------------------------------------------------------
     @functools.partial(jax.jit, static_argnames=("self", "sew"))

@@ -7,9 +7,11 @@ CORE-V X interface.  This module provides:
 * :class:`ECpu` — an instruction-accurate RV32E interpreter executing real
   32-bit RISC-V words from an eMEM image.  ``xvnmc`` (Custom-2) instructions
   are decoded and dispatched to a :class:`repro.core.carus.CarusVPU`
-  *eagerly*, while also being appended to an issue trace, so the exact same
-  kernel can later be replayed through the scanned VPU executor (and costed
-  by :mod:`repro.core.timing`).
+  *eagerly*, while also being appended to a unified-IR issue trace
+  (:mod:`repro.nmc.program` entries), so the exact same kernel can later be
+  replayed through the scanned VPU executor — or batched across tiles by
+  :class:`repro.nmc.pool.TilePool` — and costed by :mod:`repro.core.timing`
+  via :meth:`ECpu.program`.
 * :func:`assemble` — a minimal assembler for the supported subset (enough to
   write the paper's kernel-driver loops, e.g. the indirect-addressing loop of
   Section III-B1).
@@ -27,6 +29,13 @@ from repro.core import isa
 from repro.core.isa import F3, VOp
 
 N_GPRS = 16  # RV32E
+
+
+def _ir():
+    # Deferred: repro.nmc.program imports repro.core, which imports this
+    # module — a top-level import here would close that cycle.
+    from repro.nmc import program as nmc_program
+    return nmc_program
 
 
 def _sx(v: int, bits: int) -> int:
@@ -54,9 +63,13 @@ class ECpu:
         self.pc = 0
         self.sew = sew
         self.vl = vpu.cfg.vlmax(sew)
-        self.issue_trace: list[np.ndarray] = []
+        self.issue_trace: list[np.ndarray] = []   # unified-IR entries
         self.scalar_retired = 0
         self.vector_retired = 0
+
+    def program(self):
+        """The issue trace as a unified-IR Program (replayable / costable)."""
+        return _ir().Program.from_entries("carus", self.sew, self.issue_trace)
 
     # -- memory helpers -----------------------------------------------------
     def load_program(self, words: list[int], base: int = 0) -> None:
@@ -180,22 +193,22 @@ class ECpu:
             avl = self.x[d.vs1_f]
             self.vl = min(avl, self.vpu.cfg.vlmax(sew))
             self._set(d.vd_f, self.vl)
-            self.issue_trace.append(carus_mod.trace_entry(
+            self.issue_trace.append(_ir().carus_entry(
                 VOp.VSETVL, sval1=avl))
             self._replay_last()
             return
 
         if f6 == VOp.EMVX:
-            e = carus_mod.trace_entry(VOp.EMVX, vs2=d.vs2_f,
-                                      sval1=self.x[d.vs1_f])
+            e = _ir().carus_entry(VOp.EMVX, vs2=d.vs2_f,
+                                  sval1=self.x[d.vs1_f])
             self.issue_trace.append(e)
             out = self._replay_last()
             self._set(d.vd_f, int(out))
             return
         if f6 == VOp.EMVV:
-            e = carus_mod.trace_entry(VOp.EMVV, vd=d.vd_f,
-                                      sval1=self.x[d.vs1_f],
-                                      sval2=self.x[d.vs2_f])
+            e = _ir().carus_entry(VOp.EMVV, vd=d.vd_f,
+                                  sval1=self.x[d.vs1_f],
+                                  sval2=self.x[d.vs2_f])
             self.issue_trace.append(e)
             self._replay_last()
             return
@@ -211,16 +224,17 @@ class ECpu:
         imm = _sx(d.vs1_f, 5) if mode & 0x3 == isa.MODE_VI else 0
         # In indirect mode the vs2 field names the GPR carrying the indices.
         sval2 = self.x[d.vs2_f] if d.indirect else 0
-        e = carus_mod.trace_entry(VOp(f6), vd=d.vd_f, vs1=d.vs1_f,
-                                  vs2=d.vs2_f, sval1=sval1, sval2=sval2,
-                                  imm=imm, mode=mode)
+        e = _ir().carus_entry(VOp(f6), vd=d.vd_f, vs1=d.vs1_f,
+                              vs2=d.vs2_f, sval1=sval1, sval2=sval2,
+                              imm=imm, mode=mode)
         self.issue_trace.append(e)
         self._replay_last()
 
     def _replay_last(self):
-        tr = carus_mod.trace_to_arrays([self.issue_trace[-1]])
-        self.vrf, vl, outs = self.vpu.run_trace(self.vrf, tr, self.sew,
-                                                vl0=self.vl)
+        prog = _ir().Program.from_entries("carus", self.sew,
+                                          [self.issue_trace[-1]])
+        self.vrf, vl, outs = self.vpu.run_program(self.vrf, prog,
+                                                  vl0=self.vl)
         self.vl = int(vl)
         return outs[0]
 

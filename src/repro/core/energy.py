@@ -14,6 +14,10 @@ Model:
                     memory active at a constant rate)
   * NM-Carus sys:   E = P_CARUS_FIX x t + e_VRF x (VRF word accesses)
   * host/eCPU-serial phases (horizontal pooling): P_CPU_SYS / P_ECPU_PHASE.
+
+Both engines are costed through :func:`program_energy` on the unified
+program IR (DESIGN.md §5); the per-engine ``caesar_energy`` / ``carus_energy``
+helpers are wrappers that pull the IR out of a KernelBuild.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ import dataclasses
 
 from repro.core import constants as C
 from repro.core import timing as T
-from repro.core.programs import KernelBuild
+from repro.nmc.program import Program
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,45 +52,63 @@ def cpu_energy(kernel: str, sew: int, n_outputs: int) -> EnergyReport:
     return EnergyReport(e, p, {"model": "table_v"})
 
 
-def caesar_energy(kb: KernelBuild) -> EnergyReport:
-    tr = T.caesar_cycles(kb.caesar)
-    e_nmc = _mw_cycles_to_pj(C.P_CAESAR_SYS_MW, tr.cycles)
-    e_host = _mw_cycles_to_pj(C.P_CPU_SYS_MW, tr.host_cycles)
-    e = e_nmc + e_host
+# ---------------------------------------------------------------------------
+# Unified IR costing
+# ---------------------------------------------------------------------------
+
+def program_energy(prog: Program, host_cycles: float = 0.0) -> EnergyReport:
+    """System-level energy of one NMC program (either engine)."""
+    tr = T.program_cycles(prog, host_cycles)
+    if prog.engine == "caesar":
+        e_nmc = _mw_cycles_to_pj(C.P_CAESAR_SYS_MW, tr.cycles)
+        e_host = _mw_cycles_to_pj(C.P_CPU_SYS_MW, tr.host_cycles)
+        e = e_nmc + e_host
+        detail = {"nmc_pj": e_nmc, "host_pj": e_host}
+    else:
+        acc = T.program_vrf_accesses(prog)
+        e_fix = _mw_cycles_to_pj(C.P_CARUS_FIX_MW, tr.cycles)
+        e_vrf = acc * C.E_CARUS_VRF_ACCESS_PJ
+        e_host = _mw_cycles_to_pj(C.P_CARUS_ECPU_PHASE_MW, tr.host_cycles)
+        e = e_fix + e_vrf + e_host
+        detail = {"fix_pj": e_fix, "vrf_pj": e_vrf, "host_pj": e_host,
+                  "vrf_accesses": acc}
     p = e / (tr.total_cycles / C.F_CLK_BENCH_HZ) * 1e-9
-    return EnergyReport(e, p, {"nmc_pj": e_nmc, "host_pj": e_host})
+    return EnergyReport(e, p, detail)
 
 
-def carus_energy(kb: KernelBuild) -> EnergyReport:
-    tr = T.carus_cycles(kb.carus, kb.sew)
-    acc = T.carus_vrf_accesses(kb.carus, kb.sew)
-    e_fix = _mw_cycles_to_pj(C.P_CARUS_FIX_MW, tr.cycles)
-    e_vrf = acc * C.E_CARUS_VRF_ACCESS_PJ
-    e_host = _mw_cycles_to_pj(C.P_CARUS_ECPU_PHASE_MW, tr.host_cycles)
-    e = e_fix + e_vrf + e_host
-    p = e / (tr.total_cycles / C.F_CLK_BENCH_HZ) * 1e-9
-    return EnergyReport(e, p, {"fix_pj": e_fix, "vrf_pj": e_vrf,
-                               "host_pj": e_host, "vrf_accesses": acc})
+def _prog(kb, engine: str) -> tuple[Program, float]:
+    eb = getattr(kb, engine)
+    return eb.program.with_sew(kb.sew), eb.host_cycles
 
 
-def carus_macro_energy_pj(kb: KernelBuild) -> float:
+def caesar_energy(kb) -> EnergyReport:
+    return program_energy(*_prog(kb, "caesar"))
+
+
+def carus_energy(kb) -> EnergyReport:
+    return program_energy(*_prog(kb, "carus"))
+
+
+def carus_macro_energy_pj(kb) -> float:
     """Macro-only energy (Table VIII / peak-GOPS/W comparisons): excludes the
     host-idle + bus share of the fixed power."""
-    tr = T.carus_cycles(kb.carus, kb.sew)
-    acc = T.carus_vrf_accesses(kb.carus, kb.sew)
+    prog, host_cycles = _prog(kb, "carus")
+    tr = T.program_cycles(prog, host_cycles)
+    acc = T.program_vrf_accesses(prog)
     p_macro = C.P_CARUS_FIX_MW - C.P_CARUS_FIX_SPLIT_MW["host_idle+bus"]
     return _mw_cycles_to_pj(p_macro, tr.cycles) + acc * C.E_CARUS_VRF_ACCESS_PJ
 
 
-def caesar_macro_energy_pj(kb: KernelBuild) -> float:
+def caesar_macro_energy_pj(kb) -> float:
     """NM-Caesar energy for macro-level comparisons (Table VIII): system
     minus the idle host CPU — the instruction stream fetch IS part of
     operating the macro (it has no controller of its own)."""
-    tr = T.caesar_cycles(kb.caesar)
+    prog, host_cycles = _prog(kb, "caesar")
+    tr = T.program_cycles(prog, host_cycles)
     return _mw_cycles_to_pj(C.P_CAESAR_SYS_MW - 0.35, tr.cycles)
 
 
-def kernel_energy(kb: KernelBuild) -> dict[str, EnergyReport]:
+def kernel_energy(kb) -> dict[str, EnergyReport]:
     return {
         "cpu": cpu_energy(kb.name, kb.sew, kb.n_outputs),
         "caesar": caesar_energy(kb),

@@ -120,6 +120,14 @@ ARITH_OPS = {VOp.VADD: "add", VOp.VSUB: "sub", VOp.VMUL: "mul",
              VOp.VMAXU: "maxu", VOp.VSLL: "sll", VOp.VSRL: "srl",
              VOp.VSRA: "sra"}
 
+# Compact opcode ids shared by the scanned Carus executor (dense for
+# lax.switch) and the unified program IR (repro.nmc.program).
+VOP_COMPACT = (VOp.VADD, VOp.VSUB, VOp.VMUL, VOp.VMACC, VOp.VAND, VOp.VOR,
+               VOp.VXOR, VOp.VMIN, VOp.VMINU, VOp.VMAX, VOp.VMAXU, VOp.VSLL,
+               VOp.VSRL, VOp.VSRA, VOp.VMV, VOp.VSLIDEUP, VOp.VSLIDEDOWN,
+               VOp.EMVV, VOp.EMVX, VOp.VSETVL)
+COMPACT_ID = {op: i for i, op in enumerate(VOP_COMPACT)}
+
 # Timing classes (see constants.CARUS_CPE)
 VOP_TIMING_CLASS = {
     VOp.VADD: "add", VOp.VSUB: "add", VOp.VMIN: "add", VOp.VMINU: "add",

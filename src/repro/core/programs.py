@@ -32,15 +32,19 @@ import numpy as np
 from repro.core import alu
 from repro.core import constants as C
 from repro.core import isa
-from repro.core.carus import trace_entry
 from repro.core.isa import CaesarOp, VOp
+from repro.nmc.program import Program, caesar_entry, carus_entry
 
-DTYPES = {8: np.int8, 16: np.int16, 32: np.int32}
+# Builders emit unified-IR entries (DESIGN.md §5); `trace_entry` is kept as a
+# local alias so the Carus instruction templates below read like the paper.
+trace_entry = carus_entry
+
+DTYPES = alu.NP_DTYPES
 
 
 @dataclasses.dataclass
 class EngineBuild:
-    stream: list                      # caesar: (op,dest,src1,src2); carus: entries
+    stream: list                      # unified-IR entries (nmc.program)
     mem: np.ndarray                   # initial memory / VRF image (int32 words)
     out_slice: tuple[int, int]        # (word_start, n_words) in flat memory view
     host_cycles: float = 0.0          # work left on the host CPU / eCPU
@@ -48,6 +52,19 @@ class EngineBuild:
     oracle: np.ndarray | None = None  # expected final outputs for this engine
     post: Callable | None = None      # host-side finishing stage (e.g. h-pool)
     n_outputs: int = 0                # outputs produced by this engine's build
+    engine: str = ""                  # "caesar" | "carus" (set by the builder)
+    sew: int = 0                      # element width (set by the builder)
+    _prog: Program | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    @property
+    def program(self) -> Program:
+        """The build's unified-IR Program.  Legacy hand-built streams
+        (tuples / CARUS_TRACE_DTYPE scalars) are converted on the fly."""
+        if self._prog is None:
+            self._prog = Program.from_legacy(self.stream, self.sew or 32,
+                                             self.engine or None)
+        return self._prog
 
 
 @dataclasses.dataclass
@@ -58,6 +75,15 @@ class KernelBuild:
     oracle: np.ndarray                # expected output elements
     caesar: EngineBuild | None
     carus: EngineBuild | None
+
+
+def _kernel_build(name: str, sew: int, caesar_pack, carus_pack) -> KernelBuild:
+    """Tag the per-engine builds with engine/sew/oracle and assemble."""
+    (cz, orc_c), (kz, orc_k, n_out) = caesar_pack, carus_pack
+    for eb, orc, engine in ((cz, orc_c, "caesar"), (kz, orc_k, "carus")):
+        eb.oracle, eb.n_outputs = orc, orc.size
+        eb.engine, eb.sew = engine, sew
+    return KernelBuild(name, sew, n_out, orc_k, cz, kz)
 
 
 def _wrap(x: np.ndarray, sew: int) -> np.ndarray:
@@ -109,7 +135,8 @@ def build_elementwise(op_name: str, sew: int, caesar_bytes: int = 8 * 1024,
             s1, s2, d = 0, 4096, nw          # src1 bank0, src2 bank1, dst bank0
             mem[s1:s1 + nw] = alu.pack_np(a)
             mem[s2:s2 + nw] = alu.pack_np(b)
-            stream = [(cop, d + i, s1 + i, s2 + i) for i in range(nw)]
+            stream = [caesar_entry(cop, d + i, s1 + i, s2 + i)
+                      for i in range(nw)]
             return EngineBuild(stream, mem, (d, nw)), oracle, n
         # carus: chunk across registers, indirect template
         rw = C.CARUS_REG_WORDS
@@ -128,11 +155,8 @@ def build_elementwise(op_name: str, sew: int, caesar_bytes: int = 8 * 1024,
 
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
-    # oracles differ per engine (different sizes); store both via per-engine
-    cz.oracle = orc_c  # type: ignore[attr-defined]
-    kz.oracle = orc_k  # type: ignore[attr-defined]
-    cz.n_outputs, kz.n_outputs = orc_c.size, orc_k.size
-    return KernelBuild(op_name, sew, n_out, orc_k, cz, kz)
+    # oracles differ per engine (different sizes); stored per-engine
+    return _kernel_build(op_name, sew, (cz, orc_c), (kz, orc_k, n_out))
 
 
 def build_relu(sew: int, caesar_bytes: int = 8 * 1024,
@@ -162,12 +186,15 @@ def build_relu(sew: int, caesar_bytes: int = 8 * 1024,
             stream = []
             for i in range(nw):
                 if leaky_shift == 0:
-                    stream.append((CaesarOp.MAX, d + i, s + i, zero_addr))
+                    stream.append(caesar_entry(CaesarOp.MAX, d + i, s + i,
+                                               zero_addr))
                 else:
                     mem[1] = _splat_word(leaky_shift, sew)
-                    stream.append((CaesarOp.SRA, t + i % 16, s + i, 1))
-                    stream.append((CaesarOp.MAX, d + i, s + i,
-                                   (t + i % 16) | 0))  # same-bank penalty? no: t bank0, s bank1
+                    stream.append(caesar_entry(CaesarOp.SRA, t + i % 16,
+                                               s + i, 1))
+                    stream.append(caesar_entry(
+                        CaesarOp.MAX, d + i, s + i,
+                        (t + i % 16) | 0))  # no same-bank penalty: t bank0, s bank1
             return EngineBuild(stream, mem, (d, nw)), oracle, n
         rw = C.CARUS_REG_WORDS
         n_chunks = -(-nw // rw)
@@ -194,9 +221,7 @@ def build_relu(sew: int, caesar_bytes: int = 8 * 1024,
 
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
-    cz.oracle, kz.oracle = orc_c, orc_k  # type: ignore[attr-defined]
-    cz.n_outputs, kz.n_outputs = orc_c.size, orc_k.size
-    return KernelBuild(name, sew, n_out, orc_k, cz, kz)
+    return _kernel_build(name, sew, (cz, orc_c), (kz, orc_k, n_out))
 
 
 # ---------------------------------------------------------------------------
@@ -252,21 +277,27 @@ def build_matmul(sew: int, p: int | None = None, seed: int = 2,
         for i in range(m):
             for jw in range(row_w):
                 dest = c_base + i * row_w + jw
-                stream.append((CaesarOp.MAC_INIT, 0, a_base + i * k,
-                               b_base + jw))
+                stream.append(caesar_entry(CaesarOp.MAC_INIT, 0,
+                                           a_base + i * k, b_base + jw))
                 for kk in range(1, k - 1):
-                    stream.append((CaesarOp.MAC, 0, a_base + i * k + kk,
-                                   b_base + kk * row_w + jw))
-                stream.append((CaesarOp.MAC_STORE, dest if not gemm else t,
-                               a_base + i * k + (k - 1),
-                               b_base + (k - 1) * row_w + jw))
+                    stream.append(caesar_entry(
+                        CaesarOp.MAC, 0, a_base + i * k + kk,
+                        b_base + kk * row_w + jw))
+                stream.append(caesar_entry(
+                    CaesarOp.MAC_STORE, dest if not gemm else t,
+                    a_base + i * k + (k - 1), b_base + (k - 1) * row_w + jw))
                 if gemm:
-                    stream.append((CaesarOp.MUL, t + 1, t, const_base))
-                    stream.append((CaesarOp.SRA, t + 2, t + 1, const_base + 2))
-                    stream.append((CaesarOp.MUL, t + 3,
-                                   c0_base + i * row_w + jw, const_base + 1))
-                    stream.append((CaesarOp.SRA, t + 4, t + 3, const_base + 2))
-                    stream.append((CaesarOp.ADD, dest, t + 2, t + 4))
+                    stream.append(caesar_entry(CaesarOp.MUL, t + 1, t,
+                                               const_base))
+                    stream.append(caesar_entry(CaesarOp.SRA, t + 2, t + 1,
+                                               const_base + 2))
+                    stream.append(caesar_entry(CaesarOp.MUL, t + 3,
+                                               c0_base + i * row_w + jw,
+                                               const_base + 1))
+                    stream.append(caesar_entry(CaesarOp.SRA, t + 4, t + 3,
+                                               const_base + 2))
+                    stream.append(caesar_entry(CaesarOp.ADD, dest, t + 2,
+                                               t + 4))
         post = lambda e: e.reshape(m, row_w * lanes)[:, :P]
         return EngineBuild(stream, mem, (c_base, m * row_w), post=post), \
             oracle, m * P
@@ -318,9 +349,8 @@ def build_matmul(sew: int, p: int | None = None, seed: int = 2,
 
     cz, orc_c, _ = make_caesar(p or CAESAR_MATMUL_P[sew])
     kz, orc_k, n_out = make_carus(p or CARUS_MATMUL_P[sew])
-    cz.oracle, kz.oracle = orc_c, orc_k  # type: ignore[attr-defined]
-    cz.n_outputs, kz.n_outputs = orc_c.size, orc_k.size
-    return KernelBuild("gemm" if gemm else "matmul", sew, n_out, orc_k, cz, kz)
+    return _kernel_build("gemm" if gemm else "matmul", sew,
+                         (cz, orc_c), (kz, orc_k, n_out))
 
 
 # ---------------------------------------------------------------------------
@@ -382,8 +412,9 @@ def build_conv2d(sew: int, n: int | None = None, f: int | None = None,
                         last = (di == ff - 1 and dj == ff - 1)
                         opc = (CaesarOp.MAC_INIT if first else
                                (CaesarOp.MAC_STORE if last else CaesarOp.MAC))
-                        stream.append((opc, c_base + i * out_w + jw
-                                       if last else 0, src1, src2))
+                        stream.append(caesar_entry(
+                            opc, c_base + i * out_w + jw if last else 0,
+                            src1, src2))
                         first = False
         post = lambda e: e.reshape(out_r, out_w * lanes)[:, :out_c]
         return (EngineBuild(stream, mem, (c_base, out_r * out_w), post=post),
@@ -429,9 +460,7 @@ def build_conv2d(sew: int, n: int | None = None, f: int | None = None,
     nn_k, ff_k = (n, f) if n else CARUS_CONV[sew]
     cz, orc_c, _, _, _ = make_caesar(nn_c, ff_c)
     kz, orc_k, n_out, _ = make_carus(nn_k, ff_k)
-    cz.oracle, kz.oracle = orc_c, orc_k  # type: ignore[attr-defined]
-    cz.n_outputs, kz.n_outputs = orc_c.size, orc_k.size
-    return KernelBuild("conv2d", sew, n_out, orc_k, cz, kz)
+    return _kernel_build("conv2d", sew, (cz, orc_c), (kz, orc_k, n_out))
 
 
 # ---------------------------------------------------------------------------
@@ -477,7 +506,8 @@ def build_maxpool(sew: int, caesar_bytes: int = 8 * 1024,
                     alu.pack_np(X[2 * r])
                 mem[o_base + r * row_w:(o_base + (r + 1) * row_w)] = \
                     alu.pack_np(X[2 * r + 1])
-            stream = [(CaesarOp.MAX, d_base + i, e_base + i, o_base + i)
+            stream = [caesar_entry(CaesarOp.MAX, d_base + i, e_base + i,
+                                   o_base + i)
                       for i in range((rows_n // 2) * row_w)]
             return (EngineBuild(stream, mem, (d_base, (rows_n // 2) * row_w),
                                 host_cycles=n_out * horiz_cpu, post=post),
@@ -502,11 +532,9 @@ def build_maxpool(sew: int, caesar_bytes: int = 8 * 1024,
 
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
-    cz.oracle, kz.oracle = orc_c, orc_k  # type: ignore[attr-defined]
-    cz.n_outputs, kz.n_outputs = orc_c.size, orc_k.size
     # engine oracles: vertical-stage outputs live in NMC memory; full pooled
     # oracle (orc_*) includes host horizontal stage.
-    return KernelBuild("maxpool", sew, n_out, orc_k, cz, kz)
+    return _kernel_build("maxpool", sew, (cz, orc_c), (kz, orc_k, n_out))
 
 
 # ---------------------------------------------------------------------------
@@ -534,44 +562,69 @@ ALL_KERNELS = ("xor", "add", "mul", "matmul", "gemm", "conv2d", "relu",
 
 
 # ---------------------------------------------------------------------------
-# Execution helpers (used by tests and benchmarks)
+# Execution helpers (used by tests and benchmarks) — all engine dispatch goes
+# through the unified IR (repro.nmc); the engines only ever see Programs.
 # ---------------------------------------------------------------------------
+
+def run_build(eb: EngineBuild, sew: int | None = None) -> np.ndarray:
+    """Execute one EngineBuild on its functional engine; return outputs
+    (elements, with the host-side ``post`` stage applied).  ``sew`` overrides
+    the build's own tag (needed for hand-constructed untagged builds)."""
+    from repro.nmc.engine import get_engine
+
+    prog = eb.program if sew is None else eb.program.with_sew(sew)
+    engine = get_engine(prog.engine)
+    final = engine.run(engine.init_state(eb.mem), prog)
+    elems = engine.extract(final, eb.out_slice, prog.sew)
+    return eb.post(elems) if eb.post else elems
+
 
 def run_caesar(kb: KernelBuild) -> np.ndarray:
     """Execute the Caesar build on the functional engine; return outputs."""
-    import jax.numpy as jnp
-    from repro.core.caesar import CaesarEngine, stream_to_arrays
-
-    eb = kb.caesar
-    eng = CaesarEngine()
-    mem, _, _ = eng.run_stream(jnp.asarray(eb.mem),
-                               stream_to_arrays(eb.stream), kb.sew)
-    start, nw = eb.out_slice
-    elems = alu.unpack_np(np.asarray(mem[start:start + nw]), DTYPES[kb.sew])
-    return eb.post(elems) if eb.post else elems
+    return run_build(kb.caesar, kb.sew)
 
 
 def run_carus(kb: KernelBuild) -> np.ndarray:
     """Execute the Carus build on the scanned VPU; return outputs."""
-    import jax.numpy as jnp
-    from repro.core.carus import CarusVPU, trace_to_arrays
+    return run_build(kb.carus, kb.sew)
 
-    eb = kb.carus
-    vpu = CarusVPU()
-    vrf, _, _ = vpu.run_trace(jnp.asarray(eb.mem),
-                              trace_to_arrays(eb.stream), kb.sew)
-    flat = np.asarray(vrf).reshape(-1)
-    start, nw = eb.out_slice
-    elems = alu.unpack_np(flat[start:start + nw], DTYPES[kb.sew])
-    return eb.post(elems) if eb.post else elems
+
+def _matches_oracle(got: np.ndarray, eb: EngineBuild) -> bool:
+    exp = np.asarray(eb.oracle).reshape(-1)
+    return bool((got.reshape(-1)[:exp.size] == exp).all())
 
 
 def verify(kb: KernelBuild) -> dict[str, bool]:
     """Run both engines and compare against their oracles (bit-exact)."""
-    res = {}
-    for engine, runner in (("caesar", run_caesar), ("carus", run_carus)):
-        eb = getattr(kb, engine)
-        got = runner(kb).reshape(-1)
-        exp = np.asarray(eb.oracle).reshape(-1)
-        res[engine] = bool((got[:exp.size] == exp).all())
-    return res
+    return {engine: _matches_oracle(run_build(getattr(kb, engine)),
+                                    getattr(kb, engine))
+            for engine in ("caesar", "carus")}
+
+
+def verify_sweep(kbs: list[KernelBuild], pool=None) -> dict:
+    """Batched functional verification of a whole kernel sweep.
+
+    Dispatches every (kernel, sew, engine) instance through one
+    :class:`repro.nmc.pool.TilePool`, so same-shape programs (e.g.
+    xor/add/mul/relu at one SEW) share a single XLA compile and run as one
+    vmapped multi-tile batch.  Returns ``{(name, sew): {engine: ok}}`` —
+    bit-exact against the same oracles as the single-instance :func:`verify`.
+    """
+    from repro.nmc.pool import TilePool
+
+    pool = pool or TilePool()
+    builds, keys = [], []
+    for kb in kbs:
+        for engine in ("caesar", "carus"):
+            eb = getattr(kb, engine)
+            if eb is not None:
+                builds.append(eb)
+                keys.append((kb.name, kb.sew, engine))
+    outs = pool.run_builds(builds)
+    results: dict = {}
+    for (name, sew, engine), eb, got in zip(keys, builds, outs):
+        # AND-combine: a sweep may hold several instances of one (name, sew)
+        # — e.g. fig12's matmul P-sweep — and every one must be bit-exact.
+        slot = results.setdefault((name, sew), {})
+        slot[engine] = slot.get(engine, True) and _matches_oracle(got, eb)
+    return results

@@ -6,6 +6,12 @@ microarchitectural rules of the paper (Sections III-A2 and III-B2), with the
 constants documented in :mod:`repro.core.constants`.  They are validated
 against every relative claim in Table V / Table VIII / Fig. 12 in
 ``benchmarks/table_v.py`` (results in EXPERIMENTS.md §Paper-validation).
+
+Since the unified-IR refactor (DESIGN.md §5) both engines are costed through
+one entry point, :func:`program_cycles`, which walks a
+:class:`repro.nmc.program.Program`'s structured-array entries; the legacy
+``caesar_cycles`` / ``carus_cycles`` signatures survive as thin wrappers over
+it (they accept both IR-emitting builds and hand-rolled legacy streams).
 """
 
 from __future__ import annotations
@@ -18,9 +24,9 @@ import numpy as np
 from repro.core import constants as C
 from repro.core import isa
 from repro.core.caesar import CaesarConfig
-from repro.core.carus import _COMPACT, CarusConfig
-from repro.core.isa import CaesarOp, VOp
-from repro.core.programs import EngineBuild, KernelBuild
+from repro.core.carus import CarusConfig
+from repro.core.isa import VOp
+from repro.nmc.program import Program
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,26 +45,30 @@ class TimingReport:
 
 
 # ---------------------------------------------------------------------------
-# NM-Caesar
+# Unified IR costing — one code path for both engines
 # ---------------------------------------------------------------------------
 
-def caesar_cycles(eb: EngineBuild, cfg: CaesarConfig | None = None) -> TimingReport:
-    cfg = cfg or CaesarConfig()
-    cycles = C.CAESAR_OFFLOAD_CYCLES
-    same_bank = 0
-    for (op, dest, s1, s2) in eb.stream:
-        if cfg.bank_of(s1) == cfg.bank_of(s2):
-            cycles += C.CAESAR_SAME_BANK_CYCLES
-            same_bank += 1
-        else:
-            cycles += C.CAESAR_CYCLES_PER_OP
-    return TimingReport(cycles, eb.host_cycles, len(eb.stream),
-                        {"same_bank_ops": same_bank})
+def program_cycles(prog: Program, host_cycles: float = 0.0,
+                   cfg=None) -> TimingReport:
+    """Cost a unified-IR program with the engine's microarchitectural rules."""
+    if prog.engine == "caesar":
+        return _caesar_program_cycles(prog, host_cycles,
+                                      cfg or CaesarConfig())
+    return _carus_program_cycles(prog, host_cycles, cfg or CarusConfig())
 
 
-# ---------------------------------------------------------------------------
-# NM-Carus
-# ---------------------------------------------------------------------------
+def _caesar_program_cycles(prog: Program, host_cycles: float,
+                           cfg: CaesarConfig) -> TimingReport:
+    # Section III-A2: one op per 2 cycles sustained when the operands sit in
+    # opposite banks; +1 serialized-fetch cycle when they collide.
+    e = prog.entries
+    same = int(np.count_nonzero(e["src1"] // cfg.bank_words
+                                == e["src2"] // cfg.bank_words))
+    cycles = (C.CAESAR_OFFLOAD_CYCLES + same * C.CAESAR_SAME_BANK_CYCLES
+              + (len(e) - same) * C.CAESAR_CYCLES_PER_OP)
+    return TimingReport(float(cycles), host_cycles, len(e),
+                        {"same_bank_ops": same})
+
 
 def _port_accesses(vop: VOp, mode: int) -> int:
     """VRF bank-port words touched per result word (single-port banks)."""
@@ -73,18 +83,24 @@ def _port_accesses(vop: VOp, mode: int) -> int:
         return 3
     return 2                                        # vx / vi
 
+def _carus_walk(prog: Program, cfg: CarusConfig):
+    """Yield (vop, mode, vl) per entry, tracking the dynamic VL carry."""
+    vl = cfg.vlmax(prog.sew)
+    for op, sval1, mode in zip(prog.entries["op"], prog.entries["sval1"],
+                               prog.entries["mode"]):
+        vop = isa.VOP_COMPACT[int(op)]
+        if vop == VOp.VSETVL:
+            vl = min(int(sval1), cfg.vlmax(prog.sew))
+        yield vop, int(mode), vl
 
-def carus_cycles(eb: EngineBuild, sew: int,
-                 cfg: CarusConfig | None = None) -> TimingReport:
-    cfg = cfg or CarusConfig()
-    vl = cfg.vlmax(sew)
+
+def _carus_program_cycles(prog: Program, host_cycles: float,
+                          cfg: CarusConfig) -> TimingReport:
+    sew = prog.sew
     cycles = float(C.CARUS_KERNEL_OVERHEAD_CYCLES)
     busy = 0.0
-    for e in eb.stream:
-        vop = _COMPACT[int(e["op"])]
-        mode = int(e["mode"])
+    for vop, mode, vl in _carus_walk(prog, cfg):
         if vop == VOp.VSETVL:
-            vl = min(int(e["sval1"]), cfg.vlmax(sew))
             cycles += 1
             continue
         if vop in (VOp.EMVV, VOp.EMVX):
@@ -97,27 +113,56 @@ def carus_cycles(eb: EngineBuild, sew: int,
         instr_cycles = max(alu_w, port_w) * words_per_lane
         cycles += max(instr_cycles, C.CARUS_ISSUE_CYCLES)
         busy += instr_cycles
-    return TimingReport(cycles, eb.host_cycles, len(eb.stream),
+    return TimingReport(cycles, host_cycles, prog.n_instr,
                         {"vector_busy": busy})
 
 
-def carus_vrf_accesses(eb: EngineBuild, sew: int,
-                       cfg: CarusConfig | None = None) -> int:
-    """Total VRF word accesses of a trace (drives the energy model)."""
+def program_vrf_accesses(prog: Program, cfg: CarusConfig | None = None) -> int:
+    """Total VRF word accesses of a Carus program (drives the energy model)."""
+    assert prog.engine == "carus", prog.engine
     cfg = cfg or CarusConfig()
-    vl = cfg.vlmax(sew)
     acc = 0
-    for e in eb.stream:
-        vop = _COMPACT[int(e["op"])]
+    for vop, mode, vl in _carus_walk(prog, cfg):
         if vop == VOp.VSETVL:
-            vl = min(int(e["sval1"]), cfg.vlmax(sew))
             continue
         if vop in (VOp.EMVV, VOp.EMVX):
             acc += 1
             continue
-        words = math.ceil(vl * sew / 32)
-        acc += _port_accesses(vop, int(e["mode"])) * words
+        acc += _port_accesses(vop, mode) * math.ceil(vl * prog.sew / 32)
     return acc
+
+
+def _program_of(eb, engine: str, sew: int) -> Program:
+    """IR program of an EngineBuild; accepts hand-built streams too.
+
+    Untagged builds (``eb.engine`` unset) can hold any entry format —
+    legacy tuples, legacy CARUS_TRACE_DTYPE scalars, or raw PROG_DTYPE
+    entries — so the caller's engine knowledge is passed through rather
+    than relying on the build's own (auto-detecting) ``program`` property.
+    """
+    if getattr(eb, "engine", ""):
+        prog = eb.program
+    else:
+        prog = Program.from_legacy(getattr(eb, "stream", eb), sew, engine)
+    assert prog.engine == engine, (prog.engine, engine)
+    return prog.with_sew(sew)
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-engine entry points (thin wrappers over the IR path)
+# ---------------------------------------------------------------------------
+
+def caesar_cycles(eb, cfg: CaesarConfig | None = None) -> TimingReport:
+    prog = _program_of(eb, "caesar", getattr(eb, "sew", 0) or 32)
+    return program_cycles(prog, eb.host_cycles, cfg)
+
+
+def carus_cycles(eb, sew: int, cfg: CarusConfig | None = None) -> TimingReport:
+    return program_cycles(_program_of(eb, "carus", sew), eb.host_cycles, cfg)
+
+
+def carus_vrf_accesses(eb, sew: int, cfg: CarusConfig | None = None) -> int:
+    return program_vrf_accesses(_program_of(eb, "carus", sew), cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -129,12 +174,10 @@ def cpu_cycles(kernel: str, sew: int, n_outputs: int) -> TimingReport:
     return TimingReport(0.0, cyc, 0, {"model": "table_v"})
 
 
-def kernel_timing(kb: KernelBuild) -> dict[str, TimingReport]:
+def kernel_timing(kb) -> dict[str, TimingReport]:
     """Timing for all three execution targets of a KernelBuild."""
-    name = kb.name
-    out = {
-        "cpu": cpu_cycles(name, kb.sew, kb.n_outputs),
+    return {
+        "cpu": cpu_cycles(kb.name, kb.sew, kb.n_outputs),
         "caesar": caesar_cycles(kb.caesar),
         "carus": carus_cycles(kb.carus, kb.sew),
     }
-    return out

@@ -1,0 +1,20 @@
+"""Unified NMC program IR + batched multi-tile execution (DESIGN.md §5).
+
+* :mod:`repro.nmc.program` — the engine-agnostic structured-array Program IR
+  covering NM-Caesar bus-op streams and NM-Carus xvnmc issue traces.
+* :mod:`repro.nmc.engine` — the Engine protocol (lower / run / extract /
+  cost) and the two tile adapters over the functional simulators.
+* :mod:`repro.nmc.pool` — the vmapped TilePool executor with one jit compile
+  per ``(engine, sew, n_instr)`` program shape.
+"""
+
+from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
+                               stack_programs)
+from repro.nmc.engine import CaesarTile, CarusTile, Engine, get_engine
+from repro.nmc.pool import TilePool
+
+__all__ = [
+    "PROG_DTYPE", "Program", "caesar_entry", "carus_entry", "stack_programs",
+    "CaesarTile", "CarusTile", "Engine", "get_engine",
+    "TilePool",
+]

@@ -1,0 +1,142 @@
+"""Minimal deterministic fallback for the `hypothesis` API surface we use.
+
+Installed as ``sys.modules["hypothesis"]`` by ``tests/conftest.py`` *only*
+when the real package is absent (the offline CI image cannot pip-install).
+It implements just what the test-suite touches — ``@given`` / ``@settings``
+and the ``integers`` / ``sampled_from`` / ``lists`` / ``composite``
+strategies — by running each property test over ``max_examples``
+deterministically sampled inputs (seeded per test name).  No shrinking, no
+database, no adaptive search: a sampled property check, not a replacement
+for real hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+__version__ = "0.0-vendored-shim"
+
+
+class SearchStrategy:
+    """A strategy is just a sampling function rng -> value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def sample(rng):
+            for _ in range(_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(sample)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    def sample(rng):
+        # unbounded lists still need size variety for the property to bite
+        hi = min_size + 10 if max_size is None else max_size
+        n = rng.randint(min_size, hi)
+        return [elements.sample(rng) for _ in range(n)]
+    return SearchStrategy(sample)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.randrange(2)))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+
+def composite(fn):
+    """@st.composite — `fn(draw, *args)` becomes a strategy factory."""
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda s: s.sample(rng), *args, **kwargs)
+        return SearchStrategy(sample)
+    return factory
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records max_examples on the test function for @given to pick up."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats: SearchStrategy, **kw_strats):
+    """Deterministic sampled @given.
+
+    Positional strategies right-align onto the test's parameters (matching
+    hypothesis' convention); parameters supplied by pytest (fixtures,
+    parametrize) are preserved in the wrapper's visible signature.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        pos_names = names[len(names) - len(arg_strats):] if arg_strats else []
+        supplied = dict(zip(pos_names, arg_strats))
+        overlap = set(supplied) & set(kw_strats)
+        assert not overlap, f"duplicate strategies for {overlap}"
+        supplied.update(kw_strats)
+        remaining = [p for p in sig.parameters.values()
+                     if p.name not in supplied]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read at call time: honors @settings whether it sits above
+            # @given (attribute lands on `wrapper` via functools.wraps /
+            # direct decoration) or below it (attribute lands on `fn`,
+            # copied onto `wrapper` by functools.wraps)
+            max_examples = getattr(wrapper, "_shim_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES)
+            # stable per-test seed => reproducible example stream
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(max_examples):
+                drawn = {name: s.sample(rng) for name, s in supplied.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+# `from hypothesis import strategies as st` resolves this attribute; it is
+# also registered as the "hypothesis.strategies" module by conftest.py.
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("SearchStrategy", "integers", "sampled_from", "lists",
+              "booleans", "just", "tuples", "composite"):
+    setattr(strategies, _name, globals()[_name])

@@ -1,0 +1,23 @@
+"""Test-session bootstrap: vendored `hypothesis` fallback.
+
+The offline CI container cannot pip-install hypothesis; without it the three
+property-test modules fail at collection.  When the real package is absent
+we register ``tests/_vendor_hypothesis.py`` (a deterministic sampled
+implementation of the small API surface we use) under the ``hypothesis``
+name *before* test modules import it.  With real hypothesis installed this
+file is a no-op.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when available)
+except ModuleNotFoundError:
+    _path = pathlib.Path(__file__).parent / "_vendor_hypothesis.py"
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies

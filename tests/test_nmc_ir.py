@@ -1,0 +1,185 @@
+"""Unified NMC program IR + batched tile-pool executor (DESIGN.md §5).
+
+Covers the refactor's three contracts:
+* IR encode/decode round-trips losslessly for both engine formats,
+* the vmapped multi-tile pool is bit-exact vs. the single-instance path for
+  every kernel in programs.ALL_KERNELS x SEW in {8, 16, 32}, and
+* the pool compiles once per (engine, sew, n_instr) program shape.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ecpu, isa, programs
+from repro.core import timing
+from repro.core.isa import CaesarOp, VOp
+from repro.nmc import Program, TilePool, caesar_entry, carus_entry
+from repro.nmc.program import PROG_DTYPE
+
+RNG = np.random.default_rng(7)
+
+# reduced sizes keep the scanned engines fast in CI (mirrors test_engines)
+SMALL = {"caesar_bytes": 2048, "carus_bytes": 4096}
+
+
+def _build(name, sew):
+    kw = SMALL if name in ("xor", "add", "mul", "relu", "leaky_relu",
+                           "maxpool") else {}
+    return programs.build(name, sew, **kw)
+
+
+# ---------------------------------------------------------------------------
+# IR round-trips
+# ---------------------------------------------------------------------------
+
+def test_caesar_stream_roundtrip():
+    ops = [o for o in CaesarOp if o != CaesarOp.CSRW]
+    stream = [(ops[int(RNG.integers(len(ops)))], int(RNG.integers(8192)),
+               int(RNG.integers(8192)), int(RNG.integers(8192)))
+              for _ in range(64)]
+    prog = Program.from_caesar_stream(stream, sew=16)
+    assert prog.shape_key == ("caesar", 16, 64)
+    assert prog.to_caesar_stream() == stream
+
+
+def test_carus_trace_roundtrip():
+    from repro.core.carus import trace_entry as legacy_entry
+    vops = list(isa.VOP_COMPACT)
+    trace = [legacy_entry(vops[int(RNG.integers(len(vops)))],
+                          vd=int(RNG.integers(32)), vs1=int(RNG.integers(32)),
+                          vs2=int(RNG.integers(32)),
+                          sval1=int(RNG.integers(-2**31, 2**31)),
+                          sval2=int(RNG.integers(-2**31, 2**31)),
+                          imm=int(RNG.integers(-16, 16)),
+                          mode=int(RNG.integers(16)))
+             for _ in range(64)]
+    prog = Program.from_carus_trace(trace, sew=8)
+    assert prog.shape_key == ("carus", 8, 64)
+    for back, orig in zip(prog.to_carus_trace(), trace):
+        for f in isa.CARUS_TRACE_DTYPE.names:
+            assert back[f] == orig[f], f
+
+
+def test_ir_entry_helpers_match_legacy_formats():
+    e = caesar_entry(CaesarOp.MAC_STORE, 7, 100, 4196)
+    assert e.dtype == PROG_DTYPE
+    assert (int(e["op"]), int(e["dest"]), int(e["src1"]), int(e["src2"])) \
+        == (int(CaesarOp.MAC_STORE), 7, 100, 4196)
+    v = carus_entry(VOp.VMACC, vd=3, vs1=1, vs2=2, sval1=-5,
+                    mode=isa.MODE_VX)
+    assert int(v["op"]) == isa.COMPACT_ID[VOp.VMACC]
+    assert (int(v["dest"]), int(v["src1"]), int(v["src2"]),
+            int(v["sval1"]), int(v["mode"])) == (3, 1, 2, -5, isa.MODE_VX)
+
+
+def test_builder_emits_ir_and_legacy_timing_agrees():
+    """Builders emit PROG_DTYPE entries; the unified cost path must agree
+    with a Program reconstructed from the decoded legacy stream."""
+    kb = _build("gemm", 16)
+    assert kb.caesar.program.entries.dtype == PROG_DTYPE
+    assert kb.carus.program.entries.dtype == PROG_DTYPE
+    legacy = Program.from_caesar_stream(kb.caesar.program.to_caesar_stream(),
+                                        16)
+    a = timing.program_cycles(kb.caesar.program, kb.caesar.host_cycles)
+    b = timing.program_cycles(legacy, kb.caesar.host_cycles)
+    assert a == b
+    legacy_k = Program.from_carus_trace(kb.carus.program.to_carus_trace(), 16)
+    ak = timing.program_cycles(kb.carus.program.with_sew(16))
+    bk = timing.program_cycles(legacy_k)
+    assert ak == bk
+    assert timing.program_vrf_accesses(kb.carus.program.with_sew(16)) \
+        == timing.program_vrf_accesses(legacy_k)
+
+
+def test_untagged_engine_build_costs_through_wrappers():
+    """Hand-built EngineBuilds without engine/sew tags (as tests construct
+    them) must cost identically whether their stream holds legacy tuples or
+    raw IR entries — the wrappers carry the engine knowledge."""
+    legacy = programs.EngineBuild([(CaesarOp.ADD, 10, 0, 4096)] * 4,
+                                  np.zeros(8192, np.int32), (10, 1))
+    ir = programs.EngineBuild([caesar_entry(CaesarOp.ADD, 10, 0, 4096)] * 4,
+                              np.zeros(8192, np.int32), (10, 1))
+    assert timing.caesar_cycles(legacy) == timing.caesar_cycles(ir)
+    k_ir = programs.EngineBuild([programs.trace_entry(VOp.VSETVL, sval1=64)],
+                                np.zeros((32, 256), np.int32), (0, 4))
+    assert timing.carus_cycles(k_ir, 8).n_instrs == 1
+
+
+def test_ecpu_issue_trace_is_ir_program():
+    """The eCPU's issue trace round-trips through the IR and replays
+    bit-exactly on the batched executor."""
+    import jax.numpy as jnp
+    from repro.core import alu, carus
+
+    src = """
+        li   t0, 1024
+        vsetvli t1, t0, e8
+        xvnmc.vadd.vv v20, v1, v2
+        halt
+    """
+    vpu = carus.CarusVPU()
+    a = RNG.integers(-128, 128, 1024).astype(np.int8)
+    b = RNG.integers(-128, 128, 1024).astype(np.int8)
+    vrf = np.zeros((32, 256), np.int32)
+    vrf[1], vrf[2] = alu.pack_np(a), alu.pack_np(b)
+    cpu = ecpu.ECpu(vpu, jnp.asarray(vrf))
+    cpu.load_program(ecpu.assemble(src))
+    cpu.run()
+    prog = cpu.program()
+    assert isinstance(prog, Program) and prog.engine == "carus"
+    assert prog.n_instr == cpu.vector_retired == 2
+    # replay the full trace through the pool; must equal the eager result
+    pool = TilePool()
+    (final,) = pool.run([prog], [vrf])
+    assert (np.asarray(cpu.vrf) == final).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-tile execution: bit-exact vs the single-instance path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sew", [8, 16, 32])
+def test_pool_bit_exact_all_kernels(sew):
+    kbs = [_build(name, sew) for name in programs.ALL_KERNELS]
+    pool = TilePool()
+    builds = [kb.caesar for kb in kbs] + [kb.carus for kb in kbs]
+    batched = pool.run_builds(builds)
+    for eb, got in zip(builds, batched):
+        # full output identical to the single-instance path, not just the
+        # oracle-covered prefix
+        single = programs.run_build(eb)
+        assert (np.asarray(single) == np.asarray(got)).all(), \
+            (eb.engine, sew)
+        exp = np.asarray(eb.oracle).reshape(-1)
+        assert (np.asarray(got).reshape(-1)[:exp.size] == exp).all(), \
+            (eb.engine, sew)
+    # grouped dispatch: strictly fewer compiles than kernel instances
+    assert pool.compiles == len({eb.program.shape_key for eb in builds})
+    assert pool.compiles < len(builds)
+
+
+def test_pool_compiles_once_per_shape():
+    """Same-shape instances share one compile; re-dispatch hits the cache."""
+    kbs = [_build(name, 8) for name in ("xor", "add", "mul")]
+    builds = [kb.caesar for kb in kbs]
+    keys = {eb.program.shape_key for eb in builds}
+    assert len(keys) == 1, keys       # one shape => batched as 3 tiles
+    pool = TilePool()
+    pool.run_builds(builds)
+    assert pool.compiles == 1
+    assert pool.dispatches == 1 and pool.programs_run == 3
+    pool.run_builds(builds)           # same shape again: no new compile
+    assert pool.compiles == 1
+    assert pool.shape_keys_compiled == keys
+
+
+def test_pool_groups_heterogeneous_batches():
+    kbs = [_build("xor", 8), _build("relu", 8), _build("matmul", 8)]
+    pool = TilePool()
+    res = programs.verify_sweep(kbs, pool)
+    assert all(all(v.values()) for v in res.values())
+    shapes = {getattr(kb, e).program.shape_key
+              for kb in kbs for e in ("caesar", "carus")}
+    assert pool.compiles == len(shapes)
+    # xor and relu lower to the same caesar shape => batched together
+    assert pool.programs_run == 6 and pool.dispatches == len(shapes)
