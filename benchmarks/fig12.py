@@ -9,7 +9,7 @@ crossover (Caesar beats Carus at small P because of the eCPU bootstrap).
 from __future__ import annotations
 
 from repro.core import energy, programs, timing
-from repro.nmc.pool import TilePool
+from repro.nmc.pool import BucketedPool, TilePool
 from benchmarks import paper_data as PD
 
 
@@ -18,8 +18,9 @@ def run(sew: int = 8, verify: bool = False,
     kbs = [programs.build_matmul(sew, p=p, seed=11)
            for p in (8, 16, 32, 64, 128, 256, 512, 1024)]
     if verify:
-        # whole P-sweep through the batched tile pool, bit-exact
-        res = programs.verify_sweep(kbs, pool or TilePool())
+        # whole P-sweep through the shape-bucketed tile pool, bit-exact;
+        # the P-sweep's ragged instruction counts share power-of-two buckets
+        res = programs.verify_sweep(kbs, pool or BucketedPool())
         assert all(all(v.values()) for v in res.values()), res
     rows = []
     for p, kb in zip((8, 16, 32, 64, 128, 256, 512, 1024), kbs):

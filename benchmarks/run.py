@@ -5,9 +5,12 @@ contract), followed by each benchmark's detail table.  The NMC engines run
 at f_clk = 250 MHz (the paper's benchmarking frequency), so us_per_call is
 the modeled wall-clock of the 8-bit matmul kernel on each target.
 
-All functional sweeps dispatch through one shared
-:class:`repro.nmc.pool.TilePool` — the jit-cache/compile stats it reports
-verify the one-compile-per-program-shape property of the batched executor.
+All functional sweeps dispatch through one shared shape-bucketed
+:class:`repro.nmc.pool.BucketedPool` — the jit-cache/compile stats it
+reports (and ``table_v.run`` asserts) verify the one-compile-per-bucket
+property of the scheduler, and a :class:`repro.nmc.pool.ResidentPool`
+re-dispatch demonstrates the residency contract: steady-state dispatches
+move only instruction bytes, never tile memories.
 
 Run from the repo root as ``PYTHONPATH=src python -m benchmarks.run``
 (pytest picks up ``src`` automatically via pyproject.toml).  Pass ``--smoke``
@@ -26,23 +29,25 @@ import time
 def main(smoke: bool = False) -> None:
     from repro.core import constants as C
     from repro.core import programs, timing
-    from repro.nmc.pool import TilePool
+    from repro.nmc.pool import BucketedPool, ResidentPool
     from benchmarks import fig12, table_v, table_vi, table_viii
 
-    pool = TilePool()
+    pool = BucketedPool()
     lines = []
 
     # -- Table V ------------------------------------------------------------
     kernels = ("xor", "matmul", "maxpool") if smoke else programs.ALL_KERNELS
     sews = (8,) if smoke else table_v.ALL_SEWS
     t0 = time.perf_counter()
+    # table_v.run asserts compiles <= #buckets on this pool (CI smoke gate)
     rows_v = table_v.run(verify_functional=True, kernels=kernels, sews=sews,
                          pool=pool)
     sweep_wall_s = time.perf_counter() - t0
     # snapshot the pool counters here so the nmc_tile_pool line reports the
     # Table V sweep only (fig12 shares the pool below)
     sweep_stats = (pool.programs_run, pool.dispatches, pool.compiles,
-                   len(pool.shape_keys_compiled))
+                   len(pool.shape_keys_compiled), pool.pad_waste,
+                   pool.bytes_moved)
     errs = []
     for r in rows_v:
         for k in ("thr_caesar_err", "thr_carus_err", "en_caesar_err",
@@ -66,13 +71,40 @@ def main(smoke: bool = False) -> None:
                   f"carus_out_per_cyc={sat['carus_out_per_cyc']:.3f}"
                   f"_paper_0.48"))
 
-    # -- Tile pool (batched multi-tile executor) ------------------------------
+    # -- Tile pool (bucketed multi-tile scheduler) ----------------------------
     # Table V sweep only: us_per_call is sweep wall-clock per program, and
     # the counters are the snapshot taken right after that sweep
-    programs_n, dispatches_n, compiles_n, shapes_n = sweep_stats
+    (programs_n, dispatches_n, compiles_n, buckets_n, pad_waste_n,
+     bytes_moved_n) = sweep_stats
     lines.append(("nmc_tile_pool", sweep_wall_s * 1e6 / max(programs_n, 1),
                   f"programs={programs_n},dispatches={dispatches_n},"
-                  f"compiles={compiles_n},shapes={shapes_n}"))
+                  f"compiles={compiles_n},buckets={buckets_n},"
+                  f"pad_waste={pad_waste_n},bytes_moved={bytes_moved_n}"))
+
+    # -- Resident tile array (memory-mode / compute-mode duality) -------------
+    # Load two tiles once, then dispatch the same programs twice: the second
+    # compute-mode dispatch must move only instruction bytes (no tile-memory
+    # re-upload) and hit the already-traced bucket (no new compile).
+    kb8 = programs.build("xor", 8, caesar_bytes=2048, carus_bytes=4096)
+    rpool = ResidentPool()
+    t0 = time.perf_counter()
+    first = rpool.run_builds([kb8.caesar, kb8.carus])
+    moved_after_load = rpool.bytes_moved
+    compiles_after_load = rpool.compiles
+    rpool.dispatch([(t, eb.program) for t, eb in
+                    zip(rpool.tiles, (kb8.caesar, kb8.carus))])
+    resident_wall_s = time.perf_counter() - t0
+    instr_bytes = rpool.bytes_moved - moved_after_load
+    assert rpool.compiles == compiles_after_load, "re-dispatch retraced"
+    state_bytes = sum(int(rpool.state(t).size) * 4 for t in rpool.tiles)
+    assert instr_bytes < state_bytes, (instr_bytes, state_bytes)
+    ok_first = all((got.reshape(-1)[: eb.oracle.size]
+                    == eb.oracle.reshape(-1)).all()
+                   for got, eb in zip(first, (kb8.caesar, kb8.carus)))
+    lines.append(("nmc_resident_pool", resident_wall_s * 1e6 / 4,
+                  f"bitexact={ok_first},redispatch_bytes={instr_bytes},"
+                  f"tile_state_bytes={state_bytes},"
+                  f"compiles={rpool.compiles}"))
 
     if not smoke:
         # -- Table VI -------------------------------------------------------

@@ -1,14 +1,22 @@
-"""Pallas kernel demo: the TPU-native transcriptions of the paper's engines.
+"""NMC execution demo: the bucketed tile scheduler + the Pallas kernels.
 
-1. ``vrf_alu`` — the NM-Carus VPU as a fused vector-program kernel: an
+1. Bucketed multi-tile dispatch — a heterogeneous kernel sweep runs through
+   :class:`repro.nmc.pool.BucketedPool`: instruction streams NOP-pad to
+   power-of-two buckets, so the whole sweep compiles once per
+   ``(engine, sew, bucket)`` instead of once per kernel shape.
+2. Resident tile array — :class:`repro.nmc.pool.ResidentPool` keeps tile
+   memories on device across dispatches (the paper's memory-mode /
+   compute-mode duality): re-dispatching a program moves only instruction
+   bytes, never tile state.
+3. ``vrf_alu`` — the NM-Carus VPU as a fused vector-program kernel: an
    N-instruction program executes against a VMEM-resident register file in
    ONE pallas_call (one HBM round-trip instead of N), with the program as
    runtime data (the indirect-addressing property: no retrace per program).
-2. ``nmc_matmul`` — the W8A8 vmacc loop on the MXU with fused
+4. ``nmc_matmul`` — the W8A8 vmacc loop on the MXU with fused
    dequant+bias+activation epilogue.
 
-Both run here in interpret mode (CPU container); on TPU hardware the same
-calls lower to Mosaic.
+The Pallas kernels run here in interpret mode (CPU container); on TPU
+hardware the same calls lower to Mosaic.
 
 Run:  PYTHONPATH=src python examples/nmc_kernels_demo.py
 """
@@ -16,13 +24,49 @@ Run:  PYTHONPATH=src python examples/nmc_kernels_demo.py
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import programs
 from repro.kernels import ref
 from repro.kernels.nmc_matmul import nmc_matmul
 from repro.kernels.vrf_alu import make_prog, vrf_alu
+from repro.nmc import BucketedPool, ResidentPool
+
+
+def nmc_scheduler_demo():
+    small = {"caesar_bytes": 2048, "carus_bytes": 4096}
+    kbs = [programs.build(name, 8, **small)
+           for name in ("xor", "mul", "relu", "leaky_relu")]
+    # a ragged size: 384 bus ops pad into the same 512 bucket as the others
+    kbs.append(programs.build("add", 8, caesar_bytes=1536, carus_bytes=4096))
+    builds = [eb for kb in kbs for eb in (kb.caesar, kb.carus)]
+
+    print("bucketed scheduler: heterogeneous sweep, one compile per bucket")
+    pool = BucketedPool()
+    outs = pool.run_builds(builds)
+    exact = all((got.reshape(-1)[: eb.oracle.size]
+                 == eb.oracle.reshape(-1)).all()
+                for got, eb in zip(outs, builds))
+    shapes = {eb.program.shape_key for eb in builds}
+    buckets = {eb.program.bucket_key for eb in builds}
+    print(f"  {len(builds)} kernel instances, {len(shapes)} exact shapes -> "
+          f"{len(buckets)} buckets, {pool.compiles} compiles, "
+          f"pad_waste={pool.pad_waste} slots, bit-exact={exact}")
+
+    print("resident tile array: load once, dispatch many (compute mode)")
+    rpool = ResidentPool()
+    rpool.run_builds(builds[:2])
+    loaded = rpool.bytes_moved
+    rpool.dispatch([(t, eb.program)
+                    for t, eb in zip(rpool.tiles, builds[:2])])
+    print(f"  initial load+run moved {loaded} B; re-dispatch moved "
+          f"{rpool.bytes_moved - loaded} B (instruction stream only), "
+          f"{rpool.compiles} compiles total")
 
 
 def main():
     rng = np.random.default_rng(0)
+
+    nmc_scheduler_demo()
+    print()
 
     print("vrf_alu: one kernel, arbitrary programs (program = data)")
     vrf = jnp.asarray(rng.integers(-100, 100, (32, 4096)).astype(np.int16))

@@ -122,8 +122,8 @@ class CaesarEngine:
                     branches.append(dot)
                 elif o == CaesarOp.DOT_STORE:
                     branches.append(dot_store)
-                else:  # CSRW handled at stream boundaries
-                    branches.append(nop)
+                else:  # CSRW (handled at stream boundaries) and NOP (true
+                    branches.append(nop)  # no-op: bucket padding, bit-exact)
             return jax.lax.switch(op, branches, None), jnp.int32(0)
 
         mem = jnp.asarray(mem, jnp.int32)

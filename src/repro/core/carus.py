@@ -172,6 +172,10 @@ class CarusVPU:
             def vsetvl(_):
                 return vrf, jnp.minimum(sval1, vlmax)
 
+            def vnop(_):
+                # true no-op (bucket padding): VRF untouched, VL untouched
+                return vrf, jnp.int32(0)
+
             branches = []
             for cid in range(len(_COMPACT)):
                 if cid in _ARITH_BY_ID:
@@ -190,6 +194,8 @@ class CarusVPU:
                     branches.append(emvx)
                 elif _COMPACT[cid] == VOp.VSETVL:
                     branches.append(vsetvl)
+                elif _COMPACT[cid] == VOp.VNOP:
+                    branches.append(vnop)
             new_vrf, out = jax.lax.switch(op, branches, None)
             new_vl = jnp.where(op == COMPACT_ID[VOp.VSETVL],
                                jnp.minimum(sval1, vlmax), vl)

@@ -18,6 +18,12 @@ Model:
 Both engines are costed through :func:`program_energy` on the unified
 program IR (DESIGN.md §5); the per-engine ``caesar_energy`` / ``carus_energy``
 helpers are wrappers that pull the IR out of a KernelBuild.
+
+Padding NOPs (the bucketed scheduler's instruction-stream filler,
+``repro.nmc.pool``) are zero-energy by construction: they contribute no
+cycles in :mod:`repro.core.timing` and no VRF accesses, so a NOP-padded
+program costs exactly what the unpadded program costs (property-tested in
+``tests/test_nmc_ir.py``).
 """
 
 from __future__ import annotations

@@ -43,6 +43,10 @@ class CaesarOp(enum.IntEnum):
     SRA = 17   # arithmetic right shift — inherited from the CV32E40P ALU the
                # design is based on (Sec. III-A2); needed by the power-of-two
                # negative slope of Leaky-ReLU (Table V footnote f).
+    NOP = 18   # true no-op: no state change, zero cycles, zero energy.  Used
+               # by the bucketed scheduler (repro.nmc.pool) to pad instruction
+               # streams to power-of-two lengths so heterogeneous kernels
+               # share one traced computation per bucket.
 
 
 # Ops that use the 32-bit scalar DOT accumulator vs the packed MAC accumulator
@@ -112,6 +116,9 @@ class VOp(enum.IntEnum):
     EMVV = 0b110000        # v[d][x[vs2_f]] = x[rs1]        (OPMVX)
     EMVX = 0b110001        # x[rd] = v[vs2][x[rs1]]         (OPMVX)
     VSETVL = 0b111111      # configuration (OPCFG)
+    VNOP = 0b111110        # true no-op (VRF/VL untouched, zero cycles) —
+                           # instruction-stream padding for the bucketed
+                           # scheduler (repro.nmc.pool)
 
 
 ARITH_OPS = {VOp.VADD: "add", VOp.VSUB: "sub", VOp.VMUL: "mul",
@@ -125,7 +132,7 @@ ARITH_OPS = {VOp.VADD: "add", VOp.VSUB: "sub", VOp.VMUL: "mul",
 VOP_COMPACT = (VOp.VADD, VOp.VSUB, VOp.VMUL, VOp.VMACC, VOp.VAND, VOp.VOR,
                VOp.VXOR, VOp.VMIN, VOp.VMINU, VOp.VMAX, VOp.VMAXU, VOp.VSLL,
                VOp.VSRL, VOp.VSRA, VOp.VMV, VOp.VSLIDEUP, VOp.VSLIDEDOWN,
-               VOp.EMVV, VOp.EMVX, VOp.VSETVL)
+               VOp.EMVV, VOp.EMVX, VOp.VSETVL, VOp.VNOP)
 COMPACT_ID = {op: i for i, op in enumerate(VOP_COMPACT)}
 
 # Timing classes (see constants.CARUS_CPE)

@@ -605,14 +605,16 @@ def verify_sweep(kbs: list[KernelBuild], pool=None) -> dict:
     """Batched functional verification of a whole kernel sweep.
 
     Dispatches every (kernel, sew, engine) instance through one
-    :class:`repro.nmc.pool.TilePool`, so same-shape programs (e.g.
-    xor/add/mul/relu at one SEW) share a single XLA compile and run as one
-    vmapped multi-tile batch.  Returns ``{(name, sew): {engine: ok}}`` —
-    bit-exact against the same oracles as the single-instance :func:`verify`.
+    :class:`repro.nmc.pool.BucketedPool` (or any pool the caller hands in),
+    so programs sharing an ``(engine, sew, instr-bucket)`` — e.g. the whole
+    elementwise family at one SEW, or ragged matmul P-sweeps — share a
+    single XLA compile and run as one vmapped multi-tile batch.  Returns
+    ``{(name, sew): {engine: ok}}`` — bit-exact against the same oracles as
+    the single-instance :func:`verify`.
     """
-    from repro.nmc.pool import TilePool
+    from repro.nmc.pool import BucketedPool
 
-    pool = pool or TilePool()
+    pool = pool if pool is not None else BucketedPool()
     builds, keys = [], []
     for kb in kbs:
         for engine in ("caesar", "carus"):

@@ -60,8 +60,10 @@ def program_cycles(prog: Program, host_cycles: float = 0.0,
 def _caesar_program_cycles(prog: Program, host_cycles: float,
                            cfg: CaesarConfig) -> TimingReport:
     # Section III-A2: one op per 2 cycles sustained when the operands sit in
-    # opposite banks; +1 serialized-fetch cycle when they collide.
+    # opposite banks; +1 serialized-fetch cycle when they collide.  Padding
+    # NOPs (bucketed scheduler) are zero-cost: the DMA stream simply ends.
     e = prog.entries
+    e = e[e["op"] != int(isa.CaesarOp.NOP)]
     same = int(np.count_nonzero(e["src1"] // cfg.bank_words
                                 == e["src2"] // cfg.bank_words))
     cycles = (C.CAESAR_OFFLOAD_CYCLES + same * C.CAESAR_SAME_BANK_CYCLES
@@ -100,6 +102,8 @@ def _carus_program_cycles(prog: Program, host_cycles: float,
     cycles = float(C.CARUS_KERNEL_OVERHEAD_CYCLES)
     busy = 0.0
     for vop, mode, vl in _carus_walk(prog, cfg):
+        if vop == VOp.VNOP:
+            continue                     # padding: never issued, zero cost
         if vop == VOp.VSETVL:
             cycles += 1
             continue
@@ -113,7 +117,7 @@ def _carus_program_cycles(prog: Program, host_cycles: float,
         instr_cycles = max(alu_w, port_w) * words_per_lane
         cycles += max(instr_cycles, C.CARUS_ISSUE_CYCLES)
         busy += instr_cycles
-    return TimingReport(cycles, host_cycles, prog.n_instr,
+    return TimingReport(cycles, host_cycles, prog.n_instr - prog.n_nops,
                         {"vector_busy": busy})
 
 
@@ -123,7 +127,7 @@ def program_vrf_accesses(prog: Program, cfg: CarusConfig | None = None) -> int:
     cfg = cfg or CarusConfig()
     acc = 0
     for vop, mode, vl in _carus_walk(prog, cfg):
-        if vop == VOp.VSETVL:
+        if vop in (VOp.VSETVL, VOp.VNOP):
             continue
         if vop in (VOp.EMVV, VOp.EMVX):
             acc += 1

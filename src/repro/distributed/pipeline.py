@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed import context
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
                    axis: str, n_microbatches: int):
@@ -77,10 +79,9 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
 
     other_axes = [a for a in mesh.axis_names if a != axis]
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    out = jax.shard_map(
+    out = context.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
-        check_vma=False,
     )(stage_params, xm)
     return out.reshape(b, *x.shape[1:])
 

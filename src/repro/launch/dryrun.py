@@ -105,7 +105,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = hlo_analysis.normalize_cost_analysis(compiled.cost_analysis())
         hlo_text = compiled.as_text()
         ana = hlo_analysis.analyze(hlo_text)   # trip-count-expanded
         coll = parse_collectives(hlo_text)     # raw (body-once) census

@@ -3,6 +3,12 @@
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — required because the dry-run must set
 XLA_FLAGS before the first jax initialization.
+
+JAX version support: ``jax.sharding.AxisType`` only exists on newer JAX
+(>= 0.5); on 0.4.x meshes are built without ``axis_types`` (every axis is
+implicitly "auto", which is exactly what ``AxisType.Auto`` requests).
+:func:`make_mesh` is the single version-compat constructor — everything in
+the repo (and the subprocess test scripts) builds meshes through it.
 """
 
 from __future__ import annotations
@@ -10,7 +16,23 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+import jax.sharding
+from jax.sharding import Mesh
+
+
+def _axis_types_kw(n_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto,) * n`` when the installed JAX has
+    AxisType, else nothing (0.4.x behavior is implicitly auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(devices, axes: tuple[str, ...]) -> Mesh:
+    """Version-compat Mesh constructor: all axes auto-sharded."""
+    devices = np.asarray(devices)
+    return Mesh(devices, axes, **_axis_types_kw(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -23,9 +45,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     assert len(devices) >= n, \
         f"need {n} devices, have {len(devices)} — run under dryrun.py " \
         f"(XLA_FLAGS=--xla_force_host_platform_device_count=512)"
-    dev = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(dev, axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_local_mesh(model_parallel: int = 1) -> Mesh:
@@ -34,5 +54,4 @@ def make_local_mesh(model_parallel: int = 1) -> Mesh:
     mp = max(1, min(model_parallel, len(devices)))
     dp = len(devices) // mp
     dev = np.asarray(devices[: dp * mp]).reshape(dp, mp)
-    return Mesh(dev, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh(dev, ("data", "model"))

@@ -9,7 +9,9 @@ collective a dense TP FFN needs.  No all_to_all, no GSPMD-surprising gathers,
 deterministic HLO.  (A reduce-scatter + all2all variant is evaluated in the
 §Perf hillclimb.)
 
-Runs inside ``jax.shard_map`` when a mesh is active; degrades to a
+Runs inside ``context.shard_map`` (the version-compat wrapper over
+``jax.shard_map`` / ``jax.experimental.shard_map``) when a mesh is active;
+degrades to a
 single-shard call otherwise (unit tests).  Capacity-dropped tokens fall back
 to zero contribution from routed experts (shared experts still apply),
 standard top-k capacity semantics.
@@ -143,12 +145,11 @@ def moe_apply(p, x, cfg: ModelConfig):
         dax = context.data_axes()
         espec = [P(context.MODEL_AXIS, *([None] * (w.ndim - 1)))
                  for w in wargs]
-        y2, aux = jax.shard_map(
+        y2, aux = context.shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(dax if dax else None, None), P(None, None),
                       *espec),
             out_specs=(P(dax if dax else None, None), P()),
-            check_vma=False,
         )(x2, rw, *wargs)
     else:
         y2, aux = local_fn(x2, rw, *wargs)

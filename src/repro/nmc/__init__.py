@@ -1,20 +1,24 @@
 """Unified NMC program IR + batched multi-tile execution (DESIGN.md §5).
 
 * :mod:`repro.nmc.program` — the engine-agnostic structured-array Program IR
-  covering NM-Caesar bus-op streams and NM-Carus xvnmc issue traces.
+  covering NM-Caesar bus-op streams and NM-Carus xvnmc issue traces, plus
+  the padding NOP and the power-of-two instruction-bucket rule.
 * :mod:`repro.nmc.engine` — the Engine protocol (lower / run / extract /
   cost) and the two tile adapters over the functional simulators.
-* :mod:`repro.nmc.pool` — the vmapped TilePool executor with one jit compile
-  per ``(engine, sew, n_instr)`` program shape.
+* :mod:`repro.nmc.pool` — the vmapped executors: exact-shape :class:`TilePool`,
+  the shape-bucketed :class:`BucketedPool` (one jit compile per
+  ``(engine, sew, instr-bucket, tile-bucket)``) and the persistently-resident
+  :class:`ResidentPool` (tile memories stay on device across dispatches).
 """
 
 from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
-                               stack_programs)
+                               instr_bucket, nop_entry, stack_programs)
 from repro.nmc.engine import CaesarTile, CarusTile, Engine, get_engine
-from repro.nmc.pool import TilePool
+from repro.nmc.pool import BucketedPool, ResidentPool, TilePool, tile_bucket
 
 __all__ = [
-    "PROG_DTYPE", "Program", "caesar_entry", "carus_entry", "stack_programs",
+    "PROG_DTYPE", "Program", "caesar_entry", "carus_entry", "nop_entry",
+    "instr_bucket", "stack_programs",
     "CaesarTile", "CarusTile", "Engine", "get_engine",
-    "TilePool",
+    "TilePool", "BucketedPool", "ResidentPool", "tile_bucket",
 ]

@@ -1,30 +1,51 @@
-"""Batched multi-tile NMC executor (DESIGN.md §5).
+"""Batched multi-tile NMC executors (DESIGN.md §5).
 
 The paper's architectures are *scalable*: an edge node instantiates arrays of
 identical NM-Caesar / NM-Carus tiles across its SRAM macros, each running its
-own program against its own memory.  :class:`TilePool` models exactly that:
-T independent tiles execute T same-shape programs in one ``jax.vmap`` over
-the existing ``lax.scan`` engines.
+own program against its own memory.  This module models that at three levels:
 
-Compilation discipline: programs are grouped by
-:attr:`repro.nmc.program.Program.shape_key` ``(engine, sew, n_instr)`` and
-each group dispatches through one jit-compiled batched executor — one XLA
-compile per program *shape* within a :meth:`TilePool.run` call, not one per
-kernel instance.  Re-dispatching a shape later at a *different* tile count
-retraces (the batch dimension is part of the traced shapes), which is why
-the cache key carries ``n_tiles`` and ``compiles`` counts actual trace-cache
-misses: benchmarks/tests can assert the one-compile-per-shape property
-exactly where it is claimed — over a single grouped sweep.
+* :class:`TilePool` — T independent tiles execute T same-shape programs in
+  one ``jax.vmap`` over the existing ``lax.scan`` engines, jit-cached per
+  exact ``(engine, sew, n_instr, n_tiles)``.
+* :class:`BucketedPool` — the shape-bucketed scheduler: instruction streams
+  NOP-pad to power-of-two buckets (:func:`repro.nmc.program.instr_bucket`)
+  and partial tile batches pad to power-of-two tile counts
+  (:func:`tile_bucket`, extra lanes replicated and masked off on readback),
+  so a heterogeneous kernel sweep compiles once per **(engine, sew,
+  instr-bucket, tile-bucket)** instead of once per exact shape/count pair.
+* :class:`ResidentPool` — persistently-resident tile memories: per-tile
+  state stays on device across dispatches (the paper's memory-mode /
+  compute-mode duality), with explicit load/store accounting so benchmarks
+  can assert that steady-state dispatch moves only instruction bytes.
+
+Compilation discipline: ``compiles`` counts actual trace-cache misses, and
+``pad_waste`` / ``bytes_moved`` quantify the cost of the bucketing trade —
+benchmarks and tests assert on all three exactly where the property is
+claimed (one compile per bucket over a grouped sweep).
 """
 
 from __future__ import annotations
+
+import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.nmc.engine import get_engine
-from repro.nmc.program import Program, stack_programs
+from repro.nmc.program import (PROG_DTYPE, Program, instr_bucket,
+                               stack_programs)
+
+WORD_BYTES = 4
+
+
+def tile_bucket(n_tiles: int) -> int:
+    """Power-of-two tile-count bucket rule: a partial batch pads up to the
+    next power of two (replicated lanes, outputs discarded) so it reuses the
+    padded-batch trace instead of re-tracing per tile count.  Same rule as
+    :func:`repro.nmc.program.instr_bucket`, delegated so the two bucketing
+    dimensions can never drift apart."""
+    return instr_bucket(n_tiles)
 
 
 class TilePool:
@@ -36,13 +57,19 @@ class TilePool:
     key internally, so a full kernel sweep can be thrown at :meth:`run` in
     one call and same-shape instances (e.g. xor/add/mul/relu at one SEW)
     share a single compile and a single batched device dispatch.
+
+    Grouping/padding policy lives in three overridable hooks
+    (:meth:`_group_key`, :meth:`_pad_programs`, :meth:`_pad_tiles`);
+    the base class groups by *exact* ``Program.shape_key`` and never pads —
+    :class:`BucketedPool` overrides all three.
     """
 
-    def __init__(self):
+    def __init__(self, donate: bool = False):
         self._cache: dict[tuple, object] = {}
-        self.compiles = 0          # distinct (shape_key, n_tiles) traces
+        self._donate = donate
+        self.compiles = 0          # distinct traces (cache misses)
         self.dispatches = 0        # batched device executions
-        self.programs_run = 0      # total tile-programs executed
+        self.programs_run = 0      # total (real) tile-programs executed
 
     # -- compile cache -------------------------------------------------------
     def _batched_fn(self, shape_key: tuple, n_tiles: int):
@@ -50,7 +77,8 @@ class TilePool:
         fn = self._cache.get(key)
         if fn is None:
             engine_name, sew, _ = shape_key
-            fn = jax.jit(jax.vmap(get_engine(engine_name).scan_fn(sew)))
+            fn = jax.jit(jax.vmap(get_engine(engine_name).scan_fn(sew)),
+                         donate_argnums=(0,) if self._donate else ())
             self._cache[key] = fn
             self.compiles += 1
         return fn
@@ -59,24 +87,46 @@ class TilePool:
     def shape_keys_compiled(self) -> set[tuple]:
         return {k[:3] for k in self._cache}
 
+    # -- grouping / padding hooks (overridden by BucketedPool) ---------------
+    def _group_key(self, p: Program) -> tuple:
+        return p.shape_key
+
+    def _pad_programs(self, programs: list[Program]) -> list[Program]:
+        return programs
+
+    def _pad_tiles(self, n_tiles: int) -> int:
+        return n_tiles
+
+    def _account(self, programs: list[Program], n_tiles: int,
+                 batch_state, final) -> None:
+        """Counter hook: called once per batched dispatch with the *real*
+        (unreplicated) padded programs and the padded tile count."""
+
     # -- execution -----------------------------------------------------------
     def run(self, programs: list[Program], states: list) -> list[np.ndarray]:
         """Run ``programs[i]`` against ``states[i]``; return final states."""
         assert len(programs) == len(states)
         by_key: dict[tuple, list[int]] = {}
         for i, p in enumerate(programs):
-            by_key.setdefault(p.shape_key, []).append(i)
+            by_key.setdefault(self._group_key(p), []).append(i)
         out: list = [None] * len(programs)
-        for key, idxs in by_key.items():
-            fn = self._batched_fn(key, len(idxs))
-            engine = get_engine(key[0])
-            batch_state = jnp.stack(
-                [engine.init_state(states[i]) for i in idxs])
-            batch_arrays = {k: jnp.asarray(v) for k, v in stack_programs(
-                [programs[i] for i in idxs]).items()}
+        for idxs in by_key.values():
+            group = self._pad_programs([programs[i] for i in idxs])
+            n_tiles = self._pad_tiles(len(idxs))
+            engine = get_engine(group[0].engine)
+            fn = self._batched_fn(group[0].shape_key, n_tiles)
+            tile_states = [engine.init_state(states[i]) for i in idxs]
+            # padding lanes replicate tile 0; their outputs are masked off
+            # below (only real lanes are written back, in input order)
+            tile_states += [tile_states[0]] * (n_tiles - len(idxs))
+            batch_state = jnp.stack(tile_states)
+            padded = group + [group[0]] * (n_tiles - len(idxs))
+            batch_arrays = {k: jnp.asarray(v)
+                            for k, v in stack_programs(padded).items()}
             final = np.asarray(fn(batch_state, batch_arrays))
             self.dispatches += 1
             self.programs_run += len(idxs)
+            self._account(group, n_tiles, batch_state, final)
             for t, i in enumerate(idxs):
                 out[i] = final[t]
         return out
@@ -92,5 +142,164 @@ class TilePool:
         for eb, prog, final in zip(builds, programs, finals):
             elems = get_engine(prog.engine).extract(final, eb.out_slice,
                                                     prog.sew)
+            outs.append(eb.post(elems) if eb.post else elems)
+        return outs
+
+
+class BucketedPool(TilePool):
+    """Shape-bucketed :class:`TilePool` (the scheduler of DESIGN.md §5).
+
+    Programs group by :attr:`repro.nmc.program.Program.bucket_key`
+    ``(engine, sew, instr_bucket(n_instr))`` and NOP-pad to the bucket;
+    partial batches pad to power-of-two tile counts.  A heterogeneous sweep
+    therefore compiles at most once per (engine, sew, instr-bucket,
+    tile-bucket) — O(#buckets), not O(#distinct shapes x tile counts).
+
+    Extra counters (asserted by benchmarks/tests):
+
+    * ``pad_waste``   — instruction slots spent on padding: NOP tails of
+      real programs plus the whole streams of replicated padding lanes.
+    * ``bytes_moved`` — host<->device traffic of the stateless dispatch
+      path: initial-state upload + instruction-stream upload + final-state
+      download (the von-Neumann tax :class:`ResidentPool` removes).
+    """
+
+    def __init__(self, donate: bool = False):
+        super().__init__(donate=donate)
+        self.pad_waste = 0
+        self.bytes_moved = 0
+
+    def _group_key(self, p: Program) -> tuple:
+        return p.bucket_key
+
+    def _pad_programs(self, programs: list[Program]) -> list[Program]:
+        bucket = instr_bucket(max(p.n_instr for p in programs))
+        return [p.pad_to(bucket) for p in programs]
+
+    def _pad_tiles(self, n_tiles: int) -> int:
+        return tile_bucket(n_tiles)
+
+    def _account(self, programs, n_tiles, batch_state, final) -> None:
+        bucket = programs[0].n_instr
+        real = sum(p.n_instr - p.n_nops for p in programs)
+        self.pad_waste += bucket * n_tiles - real
+        self.bytes_moved += (n_tiles * bucket * PROG_DTYPE.itemsize
+                             + batch_state.size * WORD_BYTES
+                             + final.size * WORD_BYTES)
+
+
+class ResidentPool:
+    """Persistently-resident tile array over a :class:`BucketedPool`.
+
+    Models the paper's memory-mode / compute-mode duality: a tile's SRAM
+    macro is *loaded* once (memory-mode write), then arbitrarily many
+    programs execute against the resident state (compute mode) with only
+    instruction streams crossing the host/device boundary, and results are
+    *stored* back explicitly (memory-mode read).  Between dispatches the
+    per-tile state lives on device; the batched executor donates the stacked
+    state buffer (``donate_argnums``) so XLA reuses the tile-memory
+    allocation in place.
+
+    Accounting: ``bytes_moved`` counts only explicit host<->device traffic —
+    ``load`` (full image), ``dispatch`` (instruction bytes), ``store``
+    (result words) — so benchmarks can assert that steady-state dispatch
+    cost is O(program), not O(tile memory).
+    """
+
+    def __init__(self, pool: BucketedPool | None = None):
+        self.pool = pool if pool is not None else BucketedPool(donate=True)
+        self._engine: dict = {}      # tile id -> engine name
+        self._state: dict = {}       # tile id -> resident device state
+        self._ids = itertools.count()
+        self.loads = 0
+        self.stores = 0
+        self.dispatches = 0
+        self.programs_run = 0
+        self.bytes_moved = 0
+
+    @property
+    def compiles(self) -> int:
+        return self.pool.compiles
+
+    @property
+    def tiles(self) -> list:
+        return list(self._state)
+
+    def state(self, tile) -> jax.Array:
+        """The tile's resident device buffer (memory-mode view)."""
+        return self._state[tile]
+
+    # -- memory mode ---------------------------------------------------------
+    def load(self, tile, engine: str, image) -> None:
+        """Memory-mode write: host image -> resident tile memory."""
+        state = get_engine(engine).init_state(image)
+        self._engine[tile] = engine
+        self._state[tile] = state
+        self.loads += 1
+        self.bytes_moved += int(state.size) * WORD_BYTES
+
+    def store(self, tile, out_slice: tuple[int, int], sew: int) -> np.ndarray:
+        """Memory-mode read: resident output words -> host elements."""
+        engine = get_engine(self._engine[tile])
+        elems = engine.extract(self._state[tile], out_slice, sew)
+        self.stores += 1
+        self.bytes_moved += int(out_slice[1]) * WORD_BYTES
+        return elems
+
+    # -- compute mode --------------------------------------------------------
+    def dispatch(self, assignments: list[tuple]) -> None:
+        """Execute ``(tile, program)`` pairs against the resident states.
+
+        Grouped by bucket key and batched through the shared jit cache like
+        :class:`BucketedPool`; final states replace the resident buffers
+        without ever leaving the device.  Only the instruction streams are
+        uploaded (counted in ``bytes_moved``).
+
+        One dispatch is one parallel step across the tile array, so a tile
+        may appear at most once per call — chained programs on one tile are
+        sequential ``dispatch`` calls (each sees the previous final state)."""
+        seen = set()
+        by_key: dict[tuple, list[tuple]] = {}
+        for tile, prog in assignments:
+            assert tile not in seen, \
+                f"tile {tile!r} assigned twice in one dispatch — chain " \
+                f"programs via sequential dispatch() calls"
+            seen.add(tile)
+            assert self._engine[tile] == prog.engine, \
+                (tile, self._engine[tile], prog.engine)
+            by_key.setdefault(prog.bucket_key, []).append((tile, prog))
+        for key, group in by_key.items():
+            tiles = [t for t, _ in group]
+            bucket = key[2]
+            progs = [p.pad_to(bucket) for _, p in group]
+            tb = tile_bucket(len(tiles))
+            states = [self._state[t] for t in tiles]
+            states += [states[0]] * (tb - len(tiles))
+            progs += [progs[0]] * (tb - len(tiles))
+            batch_state = jnp.stack(states)
+            batch_arrays = {k: jnp.asarray(v)
+                            for k, v in stack_programs(progs).items()}
+            fn = self.pool._batched_fn(progs[0].shape_key, tb)
+            final = fn(batch_state, batch_arrays)    # stays on device
+            for t, tile in enumerate(tiles):
+                self._state[tile] = final[t]
+            self.dispatches += 1
+            self.programs_run += len(tiles)
+            self.bytes_moved += tb * bucket * PROG_DTYPE.itemsize
+
+    # -- convenience ---------------------------------------------------------
+    def run_builds(self, builds: list) -> list[np.ndarray]:
+        """EngineBuild list -> output elements via load/dispatch/store —
+        bit-identical to ``TilePool.run_builds`` (and the single-program
+        path), but leaving every tile memory resident afterwards."""
+        tiles = []
+        for eb in builds:
+            tile = ("build", next(self._ids))
+            self.load(tile, eb.program.engine, eb.mem)
+            tiles.append(tile)
+        self.dispatch([(t, eb.program) for t, eb in zip(tiles, builds)])
+        outs = []
+        for t, eb in zip(tiles, builds):
+            elems = self.store(t, eb.out_slice, eb.program.sew)
             outs.append(eb.post(elems) if eb.post else elems)
         return outs

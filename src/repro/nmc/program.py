@@ -69,6 +69,26 @@ def carus_entry(op: VOp, vd: int = 0, vs1: int = 0, vs2: int = 0,
     return e
 
 
+# Per-engine true-NOP opcodes: bit-exact no-op in the scan engines and zero
+# cost in timing/energy — the padding filler of the bucketed scheduler.
+NOP_OP_ID = {"caesar": int(CaesarOp.NOP), "carus": isa.COMPACT_ID[VOp.VNOP]}
+
+
+def nop_entry(engine: str) -> np.void:
+    """A padding NOP as an IR entry for the given engine."""
+    e = np.zeros((), dtype=PROG_DTYPE)
+    e["op"] = NOP_OP_ID[engine]
+    return e
+
+
+def instr_bucket(n_instr: int) -> int:
+    """Power-of-two instruction-count bucket rule (DESIGN.md §5): programs
+    pad up to the next power of two so heterogeneous kernels share one
+    traced computation per ``(engine, sew, bucket)``."""
+    n = int(n_instr)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class Program:
     """An engine-agnostic NMC program: ``entries`` is a PROG_DTYPE[n] array."""
@@ -137,8 +157,35 @@ class Program:
         same traced computation (one XLA compile per key)."""
         return (self.engine, self.sew, self.n_instr)
 
+    @property
+    def bucket_key(self) -> tuple:
+        """Bucketed jit-cache key ``(engine, sew, instr_bucket(n_instr))``:
+        programs with equal bucket keys pad (NOP-fill) to one shared traced
+        computation — the compile-count unit of the bucketed scheduler."""
+        return (self.engine, self.sew, instr_bucket(self.n_instr))
+
+    @property
+    def n_nops(self) -> int:
+        """Number of padding NOPs in the stream (zero-cost entries)."""
+        return int(np.count_nonzero(
+            self.entries["op"] == NOP_OP_ID[self.engine]))
+
     def with_sew(self, sew: int) -> "Program":
         return self if sew == self.sew else dataclasses.replace(self, sew=sew)
+
+    def pad_to(self, n_instr: int) -> "Program":
+        """NOP-pad the instruction stream to exactly ``n_instr`` entries.
+
+        Padding appends true NOPs, so the padded program is bit-exact with
+        the original (same final state on either engine) and costs the same
+        cycles/energy (NOPs are zero-cost in timing.py / energy.py)."""
+        pad = n_instr - self.n_instr
+        assert pad >= 0, (n_instr, self.n_instr)
+        if pad == 0:
+            return self
+        entries = np.concatenate(
+            [self.entries, np.repeat(nop_entry(self.engine)[None], pad)])
+        return dataclasses.replace(self, entries=entries)
 
     # -- lowering ------------------------------------------------------------
     def field_map(self) -> tuple:

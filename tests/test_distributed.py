@@ -61,18 +61,18 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     import json
     import numpy as np
     import jax, jax.numpy as jnp
-    from jax.sharding import Mesh, AxisType
     import sys
     sys.path.insert(0, "src")
     from repro.configs import base as cb
     from repro.distributed import context, sharding
+    from repro.launch.mesh import make_mesh
     from repro.optim import adamw
     from repro.train import step as step_lib
 
     arch = sys.argv[1]
     cfg = cb.get(arch, smoke=True)
-    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = make_mesh(np.array(jax.devices()).reshape(2, 4),
+                     ("data", "model"))
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (4, 32)))}

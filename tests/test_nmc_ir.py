@@ -1,19 +1,28 @@
-"""Unified NMC program IR + batched tile-pool executor (DESIGN.md §5).
+"""Unified NMC program IR + batched tile-pool executors (DESIGN.md §5).
 
-Covers the refactor's three contracts:
+Covers the IR and scheduler contracts:
 * IR encode/decode round-trips losslessly for both engine formats,
 * the vmapped multi-tile pool is bit-exact vs. the single-instance path for
-  every kernel in programs.ALL_KERNELS x SEW in {8, 16, 32}, and
-* the pool compiles once per (engine, sew, n_instr) program shape.
+  every kernel in programs.ALL_KERNELS x SEW in {8, 16, 32},
+* the exact-shape pool compiles once per (engine, sew, n_instr) shape,
+* NOP padding is bit-exact and zero-cost on both engines (the bucketed
+  scheduler's filler),
+* the bucketed pool compiles once per (engine, sew, instr-bucket,
+  tile-bucket) over a full Table V sweep — O(#buckets), not O(#shapes), and
+* the resident pool keeps tile state on device across dispatches with
+  explicit load/store byte accounting.
 """
 
 import numpy as np
 import pytest
 
-from repro.core import ecpu, isa, programs
+from repro.core import ecpu, energy, isa, programs
 from repro.core import timing
 from repro.core.isa import CaesarOp, VOp
-from repro.nmc import Program, TilePool, caesar_entry, carus_entry
+from repro.nmc import (BucketedPool, Program, ResidentPool, TilePool,
+                       caesar_entry, carus_entry, instr_bucket, nop_entry,
+                       tile_bucket)
+from repro.nmc.engine import get_engine
 from repro.nmc.program import PROG_DTYPE
 
 RNG = np.random.default_rng(7)
@@ -183,3 +192,183 @@ def test_pool_groups_heterogeneous_batches():
     assert pool.compiles == len(shapes)
     # xor and relu lower to the same caesar shape => batched together
     assert pool.programs_run == 6 and pool.dispatches == len(shapes)
+
+
+# ---------------------------------------------------------------------------
+# NOP padding: bit-exact no-op semantics, zero cycle/energy cost
+# ---------------------------------------------------------------------------
+
+def test_instr_bucket_rule():
+    assert [instr_bucket(n) for n in (0, 1, 2, 3, 4, 5, 129, 512, 513)] \
+        == [1, 1, 2, 4, 4, 8, 256, 512, 1024]
+    assert [tile_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9)] \
+        == [1, 2, 4, 4, 8, 8, 16]
+
+
+@pytest.mark.parametrize("engine", ["caesar", "carus"])
+@pytest.mark.parametrize("kernel", ["leaky_relu", "maxpool"])
+def test_nop_padding_bit_exact_and_zero_cost(engine, kernel):
+    """Padded program ≡ unpadded: identical final state on the scan engine,
+    identical cycles, VRF accesses and energy (NOPs are free)."""
+    eb = getattr(_build(kernel, 8), engine)
+    prog = eb.program
+    padded = prog.pad_to(instr_bucket(prog.n_instr + 1))
+    assert padded.n_instr > prog.n_instr
+    assert padded.n_nops == padded.n_instr - prog.n_instr
+    assert padded.bucket_key[2] >= prog.bucket_key[2]
+    eng = get_engine(engine)
+    s1 = eng.run(eng.init_state(eb.mem), prog)
+    s2 = eng.run(eng.init_state(eb.mem), padded)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    assert timing.program_cycles(prog, eb.host_cycles) \
+        == timing.program_cycles(padded, eb.host_cycles)
+    assert energy.program_energy(prog, eb.host_cycles) \
+        == energy.program_energy(padded, eb.host_cycles)
+    if engine == "carus":
+        assert timing.program_vrf_accesses(prog) \
+            == timing.program_vrf_accesses(padded)
+
+
+def test_nop_entry_roundtrips_through_legacy_formats():
+    c = Program.from_entries("caesar", 8, [nop_entry("caesar")] * 3)
+    assert c.n_nops == 3
+    assert c.to_caesar_stream() == [(CaesarOp.NOP, 0, 0, 0)] * 3
+    k = Program.from_entries("carus", 8, [nop_entry("carus")] * 2)
+    assert k.n_nops == 2 and k.vops() == [VOp.VNOP, VOp.VNOP]
+    back = Program.from_carus_trace(k.to_carus_trace(), 8)
+    assert back.n_nops == 2
+
+
+# ---------------------------------------------------------------------------
+# Bucketed scheduler: one compile per (engine, sew, instr-bucket, tile-bucket)
+# ---------------------------------------------------------------------------
+
+def _caesar_prog(n_instr: int, sew: int = 8) -> Program:
+    return Program.from_entries(
+        "caesar", sew,
+        [caesar_entry(CaesarOp.ADD, 100 + i, i, 4096 + i)
+         for i in range(n_instr)])
+
+
+def test_bucketed_pool_merges_ragged_shapes():
+    """Four distinct exact shapes in one instr bucket: one compile, one
+    batched dispatch, bit-exact vs the exact-shape pool."""
+    progs = [_caesar_prog(n) for n in (5, 6, 7, 8)]
+    states = [np.arange(8192, dtype=np.int32) for _ in progs]
+    pool = BucketedPool()
+    outs = pool.run(progs, [s.copy() for s in states])
+    assert len({p.shape_key for p in progs}) == 4       # exact: 4 traces
+    assert pool.compiles == 1                           # bucketed: 1
+    assert pool.dispatches == 1 and pool.programs_run == 4
+    # pad_waste: 4 tiles x bucket 8 - (5+6+7+8) real instructions
+    assert pool.pad_waste == 4 * 8 - (5 + 6 + 7 + 8)
+    assert pool.bytes_moved > 0
+    exact = TilePool()
+    refs = exact.run(progs, [s.copy() for s in states])
+    assert exact.compiles == 4
+    for got, ref in zip(outs, refs):
+        assert (got == ref).all()
+
+
+def test_bucketed_pool_tile_count_buckets_reuse_traces():
+    """Partial batches pad to power-of-two tile counts and reuse the
+    padded-batch trace instead of re-tracing per count."""
+    pool = BucketedPool()
+    state = np.zeros(8192, np.int32)
+    pool.run([_caesar_prog(8)] * 3, [state] * 3)   # 3 tiles -> bucket 4
+    assert pool.compiles == 1
+    pool.run([_caesar_prog(8)] * 4, [state] * 4)   # 4 tiles -> same bucket
+    assert pool.compiles == 1
+    pool.run([_caesar_prog(6)] * 4, [state] * 4)   # same buckets again
+    assert pool.compiles == 1
+    pool.run([_caesar_prog(8)] * 2, [state] * 2)   # 2 tiles -> new bucket
+    assert pool.compiles == 2
+
+
+@pytest.mark.parametrize("sew", [8, 16, 32])
+def test_bucketed_pool_table_v_sweep(sew):
+    """Acceptance (ISSUE 2): the full Table V kernel sweep through the
+    bucketed pool is bit-exact vs the single-program path and compiles at
+    most once per (engine, sew, bucket) — asserted on the pool counters."""
+    kbs = [_build(name, sew) for name in programs.ALL_KERNELS]
+    builds = [getattr(kb, e) for kb in kbs for e in ("caesar", "carus")]
+    pool = BucketedPool()
+    outs = pool.run_builds(builds)
+    for eb, got in zip(builds, outs):
+        # bit-exact vs the per-engine oracles (the single-program path is
+        # checked against the same oracles in test_pool_bit_exact_all_kernels
+        # and against padded programs in the NOP tests above)
+        exp = np.asarray(eb.oracle).reshape(-1)
+        assert (np.asarray(got).reshape(-1)[:exp.size] == exp).all(), \
+            (eb.engine, sew)
+    buckets = {eb.program.bucket_key for eb in builds}
+    shapes = {eb.program.shape_key for eb in builds}
+    # one grouped run: exactly one compile per occupied bucket, and
+    # bucketing must not exceed the exact-shape compile count
+    assert pool.compiles == len(buckets)
+    assert pool.compiles <= len(shapes)
+    assert pool.programs_run == len(builds)
+    # spot-check full bit-exactness vs the single-program path
+    for i in (0, 1):
+        single = programs.run_build(builds[i])
+        assert (np.asarray(single) == np.asarray(outs[i])).all()
+
+
+# ---------------------------------------------------------------------------
+# Resident tile array: memory-mode/compute-mode duality
+# ---------------------------------------------------------------------------
+
+def test_resident_pool_state_persists_across_dispatches():
+    """Two compute-mode dispatches against one resident tile must equal the
+    concatenated program run in one shot — and share one trace."""
+    mem = np.zeros(8192, np.int32)
+    mem[0], mem[4096] = 5, 7
+    pa = Program.from_entries(
+        "caesar", 32, [caesar_entry(CaesarOp.ADD, 100, 0, 4096)])
+    pb = Program.from_entries(
+        "caesar", 32, [caesar_entry(CaesarOp.XOR, 101, 100, 4096)])
+    rp = ResidentPool()
+    rp.load("t", "caesar", mem)
+    rp.dispatch([("t", pa)])
+    rp.dispatch([("t", pb)])
+    eng = get_engine("caesar")
+    both = Program.from_entries("caesar", 32,
+                                list(pa.entries) + list(pb.entries))
+    ref = np.asarray(eng.run(eng.init_state(mem), both))
+    assert (np.asarray(rp.state("t")) == ref).all()
+    assert rp.compiles == 1            # same (caesar, 32, 1, 1) bucket twice
+    assert rp.dispatches == 2 and rp.loads == 1
+
+
+def test_resident_pool_byte_accounting_and_outputs():
+    """load moves the full image, dispatch only instruction bytes, store
+    only the result words — and outputs stay bit-exact vs the oracle."""
+    kb = _build("xor", 8)
+    eb = kb.caesar
+    rp = ResidentPool()
+    rp.load("t0", "caesar", eb.mem)
+    state_bytes = int(rp.state("t0").size) * 4
+    assert rp.bytes_moved == state_bytes
+    prog = eb.program
+    rp.dispatch([("t0", prog)])
+    instr_bytes = rp.bytes_moved - state_bytes
+    assert instr_bytes == instr_bucket(prog.n_instr) * PROG_DTYPE.itemsize
+    assert instr_bytes < state_bytes   # the residency win
+    before_store = rp.bytes_moved
+    out = rp.store("t0", eb.out_slice, kb.sew)
+    assert rp.bytes_moved - before_store == eb.out_slice[1] * 4
+    exp = np.asarray(eb.oracle).reshape(-1)
+    assert (out.reshape(-1)[:exp.size] == exp).all()
+
+
+def test_resident_run_builds_matches_pool_run_builds():
+    kbs = [_build(n, 8) for n in ("xor", "add", "relu")]
+    builds = [getattr(kb, e) for kb in kbs for e in ("caesar", "carus")]
+    rp = ResidentPool()
+    got = rp.run_builds(builds)
+    ref = BucketedPool().run_builds(builds)
+    for a, b in zip(got, ref):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert rp.loads == len(builds) and rp.stores == len(builds)
+    # tile memories are still resident (memory mode) after the run
+    assert len(rp.tiles) == len(builds)

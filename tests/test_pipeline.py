@@ -20,14 +20,13 @@ _SCRIPT = textwrap.dedent("""
     import json
     import numpy as np
     import jax, jax.numpy as jnp
-    from jax.sharding import Mesh, AxisType
     import sys
     sys.path.insert(0, "src")
     from repro.distributed.pipeline import pipeline_apply
+    from repro.launch.mesh import make_mesh
 
     n_stages, n_micro, b, d = 4, 8, 16, 32
-    mesh = Mesh(np.array(jax.devices()).reshape(4), ("pod",),
-                axis_types=(AxisType.Auto,))
+    mesh = make_mesh(np.array(jax.devices()).reshape(4), ("pod",))
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(
         size=(n_stages, d, d)).astype(np.float32)) * 0.3,
