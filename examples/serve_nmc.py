@@ -3,7 +3,11 @@
 Quantizes a model to the W8A8 serving form (per-channel int8 weights,
 dynamic int8 activations, int32 accumulation — the NM-Carus vmacc contract)
 and serves a stream of requests with continuous batching, comparing output
-agreement and weight-memory footprint against the bf16 baseline.
+agreement and weight-memory footprint against the bf16 baseline.  Every
+prefill/decode computation is dispatched as queued work through the async
+:class:`repro.nmc.runtime.DispatchQueue` (DESIGN.md §5.2), so admission
+launches overlap on the device and the host blocks only at future
+resolution.
 
 Run:  PYTHONPATH=src python examples/serve_nmc.py
 """
@@ -41,7 +45,9 @@ def main():
             eng.submit(Request(rid=i, prompt=pr, max_new=8))
         done = sorted(eng.run(), key=lambda r: r.rid)
         outs[name] = [r.out for r in done]
-        print(f"{name:9s}: {[o[:6] for o in outs[name]]}")
+        print(f"{name:9s}: {[o[:6] for o in outs[name]]}  "
+              f"({eng.nmc_queue.calls} prefill/decode computations queued "
+              f"through the async dispatch runtime)")
 
     agree = np.mean([np.mean(np.array(a) == np.array(b))
                      for a, b in zip(outs["bf16"], outs["nmc-w8a8"])])

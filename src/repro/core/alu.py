@@ -141,6 +141,114 @@ BINOPS = ("add", "sub", "mul", "and", "or", "xor", "min", "max", "minu",
 
 
 # ---------------------------------------------------------------------------
+# Pure-numpy mirrors (the differential-test oracle, tests/test_differential.py)
+#
+# These reimplement the lane/word semantics above with numpy-only integer
+# arithmetic — no JAX, no tracing — so randomized programs executed by the
+# scanned engines can be checked bit-exactly against an implementation with
+# an entirely independent evaluation path.  Inputs/outputs follow the JAX
+# versions: lanes are *sign-extended int32 values* carried in int64 (so a
+# splat vx scalar is the raw 32-bit value, exactly like `lane_binop`), and
+# truncation to SEW happens at `pack_lanes_np`, exactly like `pack`.
+# ---------------------------------------------------------------------------
+
+_U32 = (1 << 32) - 1
+
+
+def _to_i32_np(x: np.ndarray) -> np.ndarray:
+    """Wrap int64 values into signed 32-bit range (bitcast semantics)."""
+    x = np.asarray(x, np.int64) & _U32
+    return np.where(x >= (1 << 31), x - (1 << 32), x)
+
+
+def trunc_lanes_np(x, sew: int) -> np.ndarray:
+    """Truncate int64 lane values to SEW bits, sign-extended (= pack+unpack)."""
+    mask = (1 << sew) - 1
+    x = np.asarray(x, np.int64) & mask
+    sign = 1 << (sew - 1)
+    return (x ^ sign) - sign
+
+
+def unpack_lanes_np(words: np.ndarray, sew: int) -> np.ndarray:
+    """int32 words[...] -> sign-extended lanes int64[..., L] (mirror of
+    :func:`unpack`, little-endian lane order)."""
+    words = np.asarray(words, np.int64) & _U32
+    nl = lanes_per_word(sew)
+    shifts = np.arange(nl, dtype=np.int64) * sew
+    return trunc_lanes_np(words[..., None] >> shifts, sew)
+
+
+def pack_lanes_np(lanes: np.ndarray, sew: int) -> np.ndarray:
+    """lanes int64[..., L] -> int32 words (mirror of :func:`pack`:
+    truncates each lane to SEW bits)."""
+    nl = lanes_per_word(sew)
+    mask = (1 << sew) - 1
+    u = np.asarray(lanes, np.int64) & mask
+    shifts = np.arange(nl, dtype=np.int64) * sew
+    return _to_i32_np((u << shifts).sum(axis=-1) & _U32)
+
+
+def lane_binop_np(op: str, a, b, sew: int) -> np.ndarray:
+    """numpy mirror of :func:`lane_binop` — untruncated int64 results over
+    sign-extended int32 lane values (truncation happens at pack, like JAX)."""
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    mask = (1 << sew) - 1
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "min":
+        return np.minimum(a, b)
+    if op == "max":
+        return np.maximum(a, b)
+    if op == "minu":
+        au, bu = a & mask, b & mask
+        return np.where(au <= bu, a, b)
+    if op == "maxu":
+        au, bu = a & mask, b & mask
+        return np.where(au >= bu, a, b)
+    sh = (b & _U32) % sew                      # RVV: shift amount mod SEW
+    if op == "sll":
+        return _to_i32_np(((a & _U32) << sh) & _U32)
+    if op == "srl":
+        return (a & mask) >> sh
+    if op == "sra":
+        return a >> sh                          # sign-extended => arithmetic
+    raise ValueError(f"unknown lane op {op!r}")
+
+
+def word_binop_np(op: str, a_words, b_words, sew: int) -> np.ndarray:
+    """numpy mirror of :func:`word_binop`."""
+    return pack_lanes_np(
+        lane_binop_np(op, unpack_lanes_np(a_words, sew),
+                      unpack_lanes_np(b_words, sew), sew), sew)
+
+
+def word_macc_np(acc_words, a_words, b_words, sew: int) -> np.ndarray:
+    """numpy mirror of :func:`word_macc`."""
+    acc = unpack_lanes_np(acc_words, sew)
+    a = unpack_lanes_np(a_words, sew)
+    b = unpack_lanes_np(b_words, sew)
+    return pack_lanes_np(acc + a * b, sew)
+
+
+def word_dot_np(acc32: int, a_words, b_words, sew: int) -> int:
+    """numpy mirror of :func:`word_dot` (wraps modulo 2^32)."""
+    a = unpack_lanes_np(a_words, sew)
+    b = unpack_lanes_np(b_words, sew)
+    return int(_to_i32_np(int(acc32) + int((a * b).sum())))
+
+
+# ---------------------------------------------------------------------------
 # Word-level operations used by the engines
 # ---------------------------------------------------------------------------
 

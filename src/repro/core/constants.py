@@ -32,6 +32,13 @@ CARUS_N_VREGS = 32                # architectural vector registers (RVV-like)
 CARUS_EMEM_BYTES = 512            # eCPU code/data memory (Section IV-B)
 WORD_BYTES = 4
 
+# Host-side DMA between main memory and the tiles' SRAM macros: the macros
+# hang off a 32-bit system bus and accept one word per bus cycle in memory
+# mode (Section III — the tile "behaves as a standard SRAM" when not
+# computing), so streaming transfers sustain 4 B/cycle.  This drives the
+# DMA legs of the dispatch-pipeline cost model (timing.dispatch_cycles).
+DMA_BYTES_PER_CYCLE = 4
+
 # Derived VRF geometry: 32 KiB / 32 regs = 1 KiB per register (VLEN = 8192 b)
 CARUS_REG_BYTES = CARUS_MEM_BYTES // CARUS_N_VREGS
 CARUS_REG_WORDS = CARUS_REG_BYTES // WORD_BYTES          # 256 words

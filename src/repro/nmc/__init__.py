@@ -9,16 +9,22 @@
   the shape-bucketed :class:`BucketedPool` (one jit compile per
   ``(engine, sew, instr-bucket, tile-bucket)``) and the persistently-resident
   :class:`ResidentPool` (tile memories stay on device across dispatches).
+* :mod:`repro.nmc.runtime` — the async double-buffered
+  :class:`DispatchQueue`: futures over queued (tile, program, image,
+  out_slice) work items, shadow-buffer staging while the previous program
+  runs, and pluggable in-order/overlapped scheduling (DESIGN.md §5.2).
 """
 
 from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
                                instr_bucket, nop_entry, stack_programs)
 from repro.nmc.engine import CaesarTile, CarusTile, Engine, get_engine
 from repro.nmc.pool import BucketedPool, ResidentPool, TilePool, tile_bucket
+from repro.nmc.runtime import DeviceFuture, DispatchQueue, NMCFuture
 
 __all__ = [
     "PROG_DTYPE", "Program", "caesar_entry", "carus_entry", "nop_entry",
     "instr_bucket", "stack_programs",
     "CaesarTile", "CarusTile", "Engine", "get_engine",
     "TilePool", "BucketedPool", "ResidentPool", "tile_bucket",
+    "DispatchQueue", "NMCFuture", "DeviceFuture",
 ]

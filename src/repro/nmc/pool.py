@@ -232,7 +232,13 @@ class ResidentPool:
     # -- memory mode ---------------------------------------------------------
     def load(self, tile, engine: str, image) -> None:
         """Memory-mode write: host image -> resident tile memory."""
-        state = get_engine(engine).init_state(image)
+        self.install(tile, engine, get_engine(engine).init_state(image))
+
+    def install(self, tile, engine: str, state) -> None:
+        """Adopt an already-staged device buffer as the tile's resident
+        state (the buffer swap of the double-buffered dispatch runtime:
+        :mod:`repro.nmc.runtime` stages images asynchronously and installs
+        them at launch time).  Accounted exactly like ``load``."""
         self._engine[tile] = engine
         self._state[tile] = state
         self.loads += 1
@@ -288,10 +294,18 @@ class ResidentPool:
             self.bytes_moved += tb * bucket * PROG_DTYPE.itemsize
 
     # -- convenience ---------------------------------------------------------
-    def run_builds(self, builds: list) -> list[np.ndarray]:
+    def run_builds(self, builds: list, queue=None) -> list[np.ndarray]:
         """EngineBuild list -> output elements via load/dispatch/store —
         bit-identical to ``TilePool.run_builds`` (and the single-program
-        path), but leaving every tile memory resident afterwards."""
+        path), but leaving every tile memory resident afterwards.
+
+        With ``queue`` (a :class:`repro.nmc.runtime.DispatchQueue` wrapping
+        *this* pool) the builds go through the async double-buffered path
+        instead: all images stage up front, waves launch batched, and
+        results materialize at future resolution — bit-exact either way."""
+        if queue is not None:
+            assert queue.pool is self, "queue must wrap this ResidentPool"
+            return queue.run_builds(builds)
         tiles = []
         for eb in builds:
             tile = ("build", next(self._ids))

@@ -9,6 +9,13 @@ updated in place (memory-mode/compute-mode duality), and with
 ``ServeEngine`` implements slot-based continuous batching: a fixed decode
 batch of S slots; finished sequences free their slot, queued requests are
 prefilled into it (prefill at batch 1 here; production would chunk).
+
+All device work — prefill admission and decode steps — is dispatched as
+queued work through a :class:`repro.nmc.runtime.DispatchQueue` (with
+``nmc_mode='w8a8'`` those are exactly the int8 NMC projections): the queue
+launches the computations asynchronously and the engine blocks only at
+future resolution, so a batch of admissions issues all its prefills before
+the first host-side cache merge (DESIGN.md §5.2).
 """
 
 from __future__ import annotations
@@ -23,6 +30,7 @@ import numpy as np
 from repro.models import layers as L
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.nmc.runtime import DispatchQueue
 
 
 def quantize_params(params: dict, cfg: ModelConfig) -> dict:
@@ -54,11 +62,14 @@ class ServeEngine:
     """Slot-based continuous batching on a single host (tests/examples)."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 nmc_queue: Optional[DispatchQueue] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.nmc_queue = nmc_queue if nmc_queue is not None \
+            else DispatchQueue()
         self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
         self.prefill = jax.jit(make_prefill_step(cfg, max_len))
         self.caches = lm.init_caches(params, cfg, n_slots, max_len,
@@ -76,22 +87,33 @@ class ServeEngine:
         self.queue.append(req)
 
     def _admit(self):
+        # two-phase admission: launch a prefill for every (free slot, queued
+        # request) pair as queued device work first — the dispatch queue's
+        # async launches overlap on the device — then resolve the futures
+        # and merge caches host-side.  Bit-identical to admitting one slot
+        # at a time (prefills are independent); only the overlap differs.
+        launches = []
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
-                logits, caches1 = self.prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
-                )
-                # copy the single-sequence cache into slot s
-                self.caches = jax.tree.map(
-                    lambda full, one: _insert_slot(full, one, s),
-                    self.caches, caches1)
-                tok = int(jnp.argmax(logits[0]))
-                req.out.append(tok)
-                self.slot_req[s] = req
-                self.slot_len[s] = len(req.prompt) + 1
-                self.slot_remaining[s] = req.max_new - 1
-                self.slot_last_tok[s] = tok
+                fut = self.nmc_queue.submit_call(
+                    self.prefill, self.params,
+                    {"tokens": jnp.asarray(req.prompt[None])})
+                launches.append((s, req, fut))
+        for s, req, fut in launches:
+            # .value, not .result(): the arrays are their own futures — the
+            # argmax below forces logits while the cache merge stays queued
+            logits, caches1 = fut.value
+            # copy the single-sequence cache into slot s
+            self.caches = jax.tree.map(
+                lambda full, one: _insert_slot(full, one, s),
+                self.caches, caches1)
+            tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self.slot_req[s] = req
+            self.slot_len[s] = len(req.prompt) + 1
+            self.slot_remaining[s] = req.max_new - 1
+            self.slot_last_tok[s] = tok
 
     # -- decode loop ----------------------------------------------------------
     def step(self):
@@ -101,8 +123,12 @@ class ServeEngine:
             return False
         toks = jnp.asarray(self.slot_last_tok[:, None])
         clen = jnp.asarray(self.slot_len)
-        logits, self.caches = self.decode(self.params, toks, self.caches,
-                                          clen)
+        # decode is queued NMC work too: launched async; only the sampled
+        # tokens are forced below, the cache update stays in flight under
+        # the host-side slot bookkeeping
+        fut = self.nmc_queue.submit_call(self.decode, self.params, toks,
+                                         self.caches, clen)
+        logits, self.caches = fut.value
         nxt = np.asarray(jnp.argmax(logits, -1))
         for s in active:
             req = self.slot_req[s]

@@ -47,6 +47,22 @@ def test_nmc_matmul_int32_accumulation_exact():
     assert float(got[0, 0]) == 127 * 127 * k
 
 
+def test_nmc_matmul_extreme_int8_epilogue_parity():
+    """Worst-case int8 operands through the full epilogue (scale + bias +
+    silu): accumulation stays exact int32 and the fused epilogue matches
+    the reference within float tolerance."""
+    k = 512
+    x = jnp.asarray(RNG.choice(np.array([-128, -1, 127], np.int8), (64, k)))
+    w = jnp.asarray(RNG.choice(np.array([-128, -1, 127], np.int8), (k, 128)))
+    s = jnp.asarray(RNG.uniform(1e-4, 1e-3, 128).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=128).astype(np.float32))
+    got = nmc_matmul(x, w, s, b, act="silu", bm=64, bn=128, bk=128,
+                     interpret=True)
+    exp = ref.nmc_matmul(x, w, s, b, act="silu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_nmc_matmul_quantized_linear_accuracy():
     """End-to-end W8A8 path keeps ~1% relative error on typical weights."""
     rng = np.random.default_rng(42)
@@ -87,6 +103,34 @@ def test_vrf_alu_program(dtype, block_vl):
     assert (np.asarray(got) == np.asarray(exp)).all()
 
 
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32])
+def test_vrf_alu_wraparound_extremes(dtype):
+    """Interpret-mode parity at the integer extremes: mul/add/sub/shift on
+    saturating-looking inputs must wrap two's-complement, bit-exact with
+    the reference (the NMC 'standard data types' contract)."""
+    info = np.iinfo(dtype)
+    vrf = np.zeros((16, 256), dtype)
+    vrf[1, :] = info.min
+    vrf[2, :] = info.max
+    vrf[3, :] = np.tile(np.array([info.min, info.max, -1, 1], dtype), 64)
+    prog = make_prog([
+        ("mul", 4, 1, 2, 0, ref.VRF_MODE_VV),    # min*max wraps
+        ("add", 5, 2, 4, 0, ref.VRF_MODE_VV),
+        ("sub", 6, 1, 5, 0, ref.VRF_MODE_VV),
+        ("mul", 7, 3, 3, 0, ref.VRF_MODE_VV),    # min^2 wraps to 0 at int8
+        ("sll", 8, 0, 7, info.bits - 1, ref.VRF_MODE_VX),
+        ("srl", 9, 0, 1, 1, ref.VRF_MODE_VX),
+        ("sra", 10, 0, 1, 1, ref.VRF_MODE_VX),
+        ("add", 11, 0, 2, 1, ref.VRF_MODE_VX),   # max+1 wraps to min
+    ])
+    got = vrf_alu(jnp.asarray(vrf), prog, block_vl=128, interpret=True)
+    pd = {k: np.asarray(prog[:, i]) for i, k in
+          enumerate(("op", "vd", "vs1", "vs2", "scalar", "mode"))}
+    exp = ref.vrf_alu(jnp.asarray(vrf), pd)
+    assert (np.asarray(got) == np.asarray(exp)).all()
+    assert np.asarray(got)[11].flat[0] == info.min   # really wrapped
+
+
 @given(n_instr=st.integers(1, 12), seed=st.integers(0, 2**16))
 @settings(max_examples=10, deadline=None)
 def test_vrf_alu_random_programs(n_instr, seed):
@@ -123,6 +167,18 @@ def test_flash_attention_configs(b, hq, hkv, sq, skv, d, causal, win):
     got = flash_attention(q, k, v, causal=causal, window=win, bq=64, bk=128,
                           interpret=True)
     exp = ref.attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5)
+
+
+def test_flash_attention_gqa_window_combined():
+    """GQA + sliding window + causal in one config (the serving attention
+    shape), interpret-mode vs the plain-softmax reference."""
+    q = jnp.asarray(RNG.normal(size=(2, 8, 192, 64)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 2, 384, 64)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 2, 384, 64)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=True, window=96, bq=64, bk=64,
+                          interpret=True)
+    exp = ref.attention(q, k, v, causal=True, window=96)
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5)
 
 
