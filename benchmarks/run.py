@@ -5,13 +5,16 @@ contract), followed by each benchmark's detail table.  The NMC engines run
 at f_clk = 250 MHz (the paper's benchmarking frequency), so us_per_call is
 the modeled wall-clock of the 8-bit matmul kernel on each target.
 
-All functional sweeps dispatch through one shared shape-bucketed
-:class:`repro.nmc.pool.BucketedPool` — the jit-cache/compile stats it
+The ``nmc_jit_frontend`` line gates the public one-call path (DESIGN.md
+§7): a traced ``nmc.kernel`` must auto-select its engine and run bit-exact
+vs the tracer's numpy oracle on both engines via both sync and async call
+styles.  All functional sweeps dispatch through one shared shape-bucketed
+:class:`repro.nmc.BucketedPool` — the jit-cache/compile stats it
 reports (and ``table_v.run`` asserts) verify the one-compile-per-bucket
-property of the scheduler, and a :class:`repro.nmc.pool.ResidentPool`
+property of the scheduler, and a :class:`repro.nmc.ResidentPool`
 re-dispatch demonstrates the residency contract: steady-state dispatches
 move only instruction bytes, never tile memories.  The async
-:class:`repro.nmc.runtime.DispatchQueue` section feeds a 2-tile array a
+:class:`repro.nmc.DispatchQueue` section feeds a 2-tile array a
 heterogeneous kernel stream (double-buffered staging, futures) and asserts
 bit-exactness vs synchronous dispatch plus the overlapped-DMA timing win.
 
@@ -30,13 +33,44 @@ import time
 
 
 def main(smoke: bool = False) -> None:
+    import numpy as np
+    from repro import nmc
     from repro.core import constants as C
     from repro.core import programs, timing
-    from repro.nmc.pool import BucketedPool, ResidentPool
+    from repro.nmc import BucketedPool, ResidentPool
     from benchmarks import fig12, table_v, table_vi, table_viii
 
     pool = BucketedPool()
     lines = []
+
+    # -- Traced frontend (nmc.jit): the public one-call path ------------------
+    # A fused kernel authored against the frontend must auto-select, lower,
+    # and run bit-exact vs the tracer's numpy oracle on BOTH engines via
+    # both call styles — the public-API gate for everything below (the
+    # Table V builders themselves are traced kernels).
+    rng = np.random.default_rng(3)
+
+    @nmc.kernel
+    def fused(t, x, y):
+        a, b = t.load(x, bank=0), t.load(y)
+        t.store(((a * 3) + b).max(a >> 1))
+
+    fx = rng.integers(-128, 128, 2048, dtype=np.int8)
+    fy = rng.integers(-128, 128, 2048, dtype=np.int8)
+    assert fused.select_engine(fx, fy) == "caesar"   # bus-expressible body
+    oracle = fused.oracle(fx, fy)
+    t0 = time.perf_counter()
+    jit_ok = True
+    for eng in ("caesar", "carus"):
+        sync = np.asarray(fused(fx, fy, engine=eng))
+        fut = fused.call_async(fx, fy, engine=eng)
+        jit_ok &= (sync == oracle).all() and \
+            (np.asarray(fut.result()) == sync).all()
+    assert jit_ok, "nmc.jit sync/async diverged from the numpy oracle"
+    jit_wall_s = time.perf_counter() - t0
+    lines.append(("nmc_jit_frontend", jit_wall_s * 1e6 / 4,
+                  f"bitexact={jit_ok},auto_engine=caesar,"
+                  f"engines=2,call_styles=sync+async"))
 
     # -- Table V ------------------------------------------------------------
     kernels = ("xor", "matmul", "maxpool") if smoke else programs.ALL_KERNELS
@@ -114,8 +148,7 @@ def main(smoke: bool = False) -> None:
     # images stage into shadow buffers while the previous programs run
     # (staged_while_busy > 0), results resolve through futures, and the
     # outputs must be bit-exact vs the synchronous ResidentPool path.
-    import numpy as np
-    from repro.nmc.runtime import DispatchQueue
+    from repro.nmc import DispatchQueue
     small = dict(caesar_bytes=2048, carus_bytes=4096)
     akbs = [programs.build(n, 8, **small)
             for n in ("xor", "add", "mul", "relu")]

@@ -4,19 +4,23 @@ Runs every kernel x bitwidth functionally (bit-exact check on both engines),
 derives cycles/energy from the calibrated mechanistic models, and compares
 the improvement factors against the paper's published Table V.
 
-The functional sweep dispatches through a shape-bucketed
-:class:`repro.nmc.pool.BucketedPool`: all (kernel x SEW x engine) instances
-NOP-pad to power-of-two instruction buckets and run as vmapped multi-tile
-groups — one XLA compile per ``(engine, sew, bucket)`` instead of one per
-kernel instance or exact program shape.  ``run`` asserts the compile bound
-(compiles <= #buckets) on the pool counters, so the CI smoke subset gates
-the scheduling property, not just functional correctness.
+The whole sweep rides the public ``repro.nmc`` stack (DESIGN.md §7): the
+kernel builders are traced-frontend kernels (their instruction streams are
+emitted by :mod:`repro.nmc.frontend` lowering, their oracles by the
+tracer's ``alu.*_np`` evaluation), and the functional sweep dispatches
+through a shape-bucketed :class:`repro.nmc.BucketedPool`: all (kernel x
+SEW x engine) instances NOP-pad to power-of-two instruction buckets and
+run as vmapped multi-tile groups — one XLA compile per ``(engine, sew,
+bucket)`` instead of one per kernel instance or exact program shape.
+``run`` asserts the compile bound (compiles <= #buckets) on the pool
+counters, so the CI smoke subset gates the scheduling property, not just
+functional correctness.
 """
 
 from __future__ import annotations
 
 from repro.core import energy, programs, timing
-from repro.nmc.pool import BucketedPool, TilePool
+from repro.nmc import BucketedPool, TilePool
 from benchmarks import paper_data as PD
 
 ALL_SEWS = (8, 16, 32)

@@ -1,10 +1,14 @@
-"""NMC execution demo: the bucketed tile scheduler + the Pallas kernels.
+"""NMC execution demo: the traced frontend, the bucketed tile scheduler
+and the Pallas kernels.
 
+0. ``nmc.kernel`` — author a custom fused kernel as numpy-style Python:
+   one decorator gives tracing, engine auto-selection, unified-IR
+   lowering, pooled scheduling and sync/async dispatch (DESIGN.md §7).
 1. Bucketed multi-tile dispatch — a heterogeneous kernel sweep runs through
-   :class:`repro.nmc.pool.BucketedPool`: instruction streams NOP-pad to
+   :class:`repro.nmc.BucketedPool`: instruction streams NOP-pad to
    power-of-two buckets, so the whole sweep compiles once per
    ``(engine, sew, bucket)`` instead of once per kernel shape.
-2. Resident tile array — :class:`repro.nmc.pool.ResidentPool` keeps tile
+2. Resident tile array — :class:`repro.nmc.ResidentPool` keeps tile
    memories on device across dispatches (the paper's memory-mode /
    compute-mode duality): re-dispatching a program moves only instruction
    bytes, never tile state.
@@ -24,11 +28,41 @@ Run:  PYTHONPATH=src python examples/nmc_kernels_demo.py
 import numpy as np
 import jax.numpy as jnp
 
+from repro import nmc
 from repro.core import programs, timing
 from repro.kernels import ref
 from repro.kernels.nmc_matmul import nmc_matmul
 from repro.kernels.vrf_alu import make_prog, vrf_alu
 from repro.nmc import BucketedPool, DispatchQueue, ResidentPool
+
+
+def frontend_demo():
+    rng = np.random.default_rng(1)
+    print("nmc.kernel: numpy-style authoring, the whole stack in one call")
+
+    @nmc.kernel
+    def leaky_gate(t, x, g):
+        xv, gv = t.load(x, bank=0), t.load(g)
+        t.store(xv.max(xv >> 2) & gv)        # leaky-relu, gated
+
+    x = rng.integers(-128, 128, 1024, dtype=np.int8)
+    g = rng.integers(-128, 128, 1024, dtype=np.int8)
+    picked = leaky_gate.select_engine(x, g)
+    sync = leaky_gate(x, g)
+    futs = [leaky_gate.call_async(x, g, engine=e)
+            for e in ("caesar", "carus")]
+    agree = all((np.asarray(f.result()) == np.asarray(sync)).all()
+                for f in futs)
+    oracle_ok = (np.asarray(sync) == leaky_gate.oracle(x, g)).all()
+    assert agree and oracle_ok, "frontend sync/async/oracle diverged"
+    print(f"  auto-selected engine: {picked}; sync == async(caesar) == "
+          f"async(carus) == numpy oracle: {agree and oracle_ok}")
+
+    @nmc.kernel
+    def needs_carus(t, x, g):
+        t.store(t.load(x).maxu(t.load(g)))
+    print(f"  x.maxu(g) auto-selects: {needs_carus.select_engine(x, g)} "
+          f"(unsigned compares are xvnmc-only)")
 
 
 def nmc_scheduler_demo():
@@ -45,6 +79,7 @@ def nmc_scheduler_demo():
     exact = all((got.reshape(-1)[: eb.oracle.size]
                  == eb.oracle.reshape(-1)).all()
                 for got, eb in zip(outs, builds))
+    assert exact, "bucketed sweep diverged from the kernel oracles"
     shapes = {eb.program.shape_key for eb in builds}
     buckets = {eb.program.bucket_key for eb in builds}
     print(f"  {len(builds)} kernel instances, {len(shapes)} exact shapes -> "
@@ -67,6 +102,7 @@ def nmc_scheduler_demo():
     async_ok = all((got.reshape(-1)[: eb.oracle.size]
                     == eb.oracle.reshape(-1)).all()
                    for got, eb in zip(async_outs, builds))
+    assert async_ok, "async futures diverged from the kernel oracles"
     stages = [timing.stage_cost(eb) for eb in builds]
     ser = timing.dispatch_cycles(stages, "serial")
     ovl = timing.dispatch_cycles(stages, "overlapped")
@@ -79,6 +115,9 @@ def nmc_scheduler_demo():
 
 def main():
     rng = np.random.default_rng(0)
+
+    frontend_demo()
+    print()
 
     nmc_scheduler_demo()
     print()
@@ -99,8 +138,10 @@ def main():
         pd = {k: np.asarray(prog[:, i]) for i, k in
               enumerate(("op", "vd", "vs1", "vs2", "scalar", "mode"))}
         exp = ref.vrf_alu(vrf, pd)
+        ok = bool((np.asarray(out) == np.asarray(exp)).all())
+        assert ok, f"vrf_alu {name} diverged from the reference"
         print(f"  {name}: {prog.shape[0]} instrs, one HBM round-trip, "
-              f"bit-exact={bool((np.asarray(out) == np.asarray(exp)).all())}")
+              f"bit-exact={ok}")
 
     print("\nnmc_matmul: W8A8 with fused epilogue (int32 accumulation)")
     m, k, n = 512, 1024, 512

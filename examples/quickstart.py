@@ -1,77 +1,106 @@
-"""Quickstart: the paper's NMC engines in five minutes.
+"""Quickstart: the whole NMC stack as one function call (`nmc.jit`).
 
-Runs an 8-bit matrix multiplication three ways — RV32IMC CPU (Table V
-baseline model), NM-Caesar (host-streamed micro-ops), NM-Carus (autonomous
-xvnmc program) — verifying bit-exactness and reporting the modeled
-cycles/energy, then demonstrates full eCPU programmability by assembling
-and executing a real RV32E + xvnmc kernel with indirect register addressing.
+Write a kernel as numpy-style Python; calling it runs trace -> engine
+auto-selection -> unified-IR lowering -> bucketed/resident scheduling ->
+dispatch -> extraction, bit-exact against the pure-numpy oracle the
+tracer evaluates alongside.  This demo:
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+1. compiles a fused elementwise kernel and runs it on BOTH engines, sync
+   and async, comparing against the oracle and reporting modeled
+   cycles/energy;
+2. shows engine auto-selection picking NM-Caesar for bus-expressible
+   bodies and NM-Carus for bodies the bus ALU cannot express — plus the
+   `UnsupportedOnEngine` diagnostic for an explicit bad choice;
+3. runs the paper's 8-bit matmul (Table V) through the same traced
+   frontend (the kernel library is built on it) against the RV32IMC CPU
+   baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py   (finishes in ~20 s)
 """
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import alu, carus, ecpu, energy, programs, timing
+from repro import nmc
+from repro.core import energy, programs, timing
 from repro.core.constants import F_CLK_BENCH_HZ
 
 
 def main():
+    rng = np.random.default_rng(0)
     print("=" * 64)
-    print("NM-Caesar / NM-Carus quickstart (8-bit matmul A[8,8] x B[8,1024])")
+    print("1. one kernel, the whole stack: @nmc.kernel -> both engines")
     print("=" * 64)
-    kb = programs.build("matmul", 8)
-    ok = programs.verify(kb)
-    print(f"functional (bit-exact vs quantized oracle): {ok}")
 
+    @nmc.kernel                       # trace + auto engine selection, SEW 8
+    def fused(t, x, y):
+        a, b = t.load(x, bank=0), t.load(y)
+        t.store(((a * 3) + b).max(0))        # scaled-add + ReLU
+
+    x = rng.integers(-128, 128, 2048, dtype=np.int8)
+    y = rng.integers(-128, 128, 2048, dtype=np.int8)
+    oracle = fused.oracle(x, y)
+
+    for engine in ("caesar", "carus"):
+        out = fused(x, y, engine=engine)            # synchronous call
+        fut = fused.call_async(x, y, engine=engine)  # DispatchQueue future
+        ok = (np.asarray(out) == oracle).all() and \
+            (np.asarray(fut.result()) == np.asarray(out)).all()
+        assert ok, f"{engine}: sync/async diverged from the numpy oracle"
+        lk = fused.lower(x, y, engine=engine)
+        t = timing.program_cycles(lk.program)
+        e = energy.program_energy(lk.program)
+        print(f"  {engine:6s}: {lk.program.n_instr:5d} instrs, "
+              f"{t.total_cycles:7.0f} cyc "
+              f"({t.total_cycles / F_CLK_BENCH_HZ * 1e6:5.1f} us @250MHz), "
+              f"{e.energy_pj / 1e3:6.1f} nJ, sync==async==oracle: {ok}")
+
+    print()
+    print("=" * 64)
+    print("2. engine auto-selection + diagnostics")
+    print("=" * 64)
+
+    @nmc.kernel
+    def bus_friendly(t, x):
+        t.store((t.load(x) + 1).max(0))
+
+    @nmc.kernel
+    def needs_vector_isa(t, x):
+        t.store(t.load(x).maxu(100))         # unsigned max: xvnmc only
+
+    print(f"  (x + 1).relu()  -> {bus_friendly.select_engine(x)}"
+          f"   (bus-expressible: host-streamed micro-ops, no eCPU boot)")
+    print(f"  x.maxu(100)     -> {needs_vector_isa.select_engine(x)}"
+          f"   (the bus ALU has no unsigned compare)")
+    try:
+        needs_vector_isa.lower(x, engine="caesar")
+    except nmc.UnsupportedOnEngine as err:
+        print(f"  explicit engine='caesar' raises: {err}")
+
+    print()
+    print("=" * 64)
+    print("3. Table V matmul (8-bit) through the same traced frontend")
+    print("=" * 64)
+    kb = programs.build("matmul", 8)      # kernel library = traced kernels
+    ok = programs.verify(kb)
+    print(f"  functional (bit-exact vs quantized oracle): {ok}")
+    assert all(ok.values()), ok
     t = timing.kernel_timing(kb)
     e = energy.kernel_energy(kb)
-    print(f"\n{'target':10s} {'cycles':>10s} {'us @250MHz':>11s} "
-          f"{'energy nJ':>10s} {'vs CPU':>7s}")
     cpu_cyc = t["cpu"].total_cycles
+    print(f"  {'target':8s} {'cycles':>9s} {'us @250MHz':>11s} "
+          f"{'energy nJ':>10s} {'vs CPU':>7s}")
     for name in ("cpu", "caesar", "carus"):
         cyc = t[name].total_cycles
         outs = kb.n_outputs if name == "cpu" else getattr(kb, name).n_outputs
         speed = (cpu_cyc / kb.n_outputs) / (cyc / outs)
-        print(f"{name:10s} {cyc:10.0f} {cyc/F_CLK_BENCH_HZ*1e6:11.1f} "
+        print(f"  {name:8s} {cyc:9.0f} {cyc/F_CLK_BENCH_HZ*1e6:11.1f} "
               f"{e[name].energy_pj/1e3:10.1f} {speed:6.1f}x")
 
-    print("\n" + "=" * 64)
-    print("eCPU programmability: assembled RV32E + xvnmc kernel")
-    print("=" * 64)
-    src = """
-        li   a0, 4              # chunks
-        li   t0, 1024
-        vsetvli t1, t0, e8
-        li   t2, 0x00140A00     # packed indices vd=20 vs2=10 vs1=0
-        li   a1, 0x00010101     # +1 on each index per iteration
-        li   t1, 0
-    loop:
-        xvnmc.vaddr.vv t2       # indirect-addressed vector add
-        add  t2, t2, a1
-        addi t1, t1, 1
-        blt  t1, a0, loop
-        halt
-    """
-    words = ecpu.assemble(src)
-    print(f"assembled {len(words)} instruction words "
-          f"(code size independent of data size — Section III-B1)")
-    vpu = carus.CarusVPU()
-    rng = np.random.default_rng(0)
-    a = rng.integers(-128, 128, 4096, dtype=np.int8)
-    b = rng.integers(-128, 128, 4096, dtype=np.int8)
-    vrf = np.zeros((32, 256), np.int32)
-    for i in range(4):
-        vrf[i] = alu.pack_np(a[i * 1024:(i + 1) * 1024])
-        vrf[10 + i] = alu.pack_np(b[i * 1024:(i + 1) * 1024])
-    cpu = ecpu.ECpu(vpu, jnp.asarray(vrf))
-    cpu.load_program(words)
-    cpu.run()
-    got = np.concatenate([alu.unpack_np(np.asarray(cpu.vrf[20 + i]), np.int8)
-                          for i in range(4)])
-    print(f"eCPU executed {cpu.scalar_retired} scalar + "
-          f"{cpu.vector_retired} vector instructions; "
-          f"result correct: {bool((got == a + b).all())}")
+    rt = nmc.default_runtime()
+    print(f"\n  shared runtime: {rt.bucketed.compiles} XLA compiles, "
+          f"{rt.resident.dispatches} dispatches, "
+          f"{rt.queue.submitted} queued kernel calls (sync + async share "
+          f"the dispatch queue)")
 
 
 if __name__ == "__main__":

@@ -5,9 +5,9 @@ dynamic int8 activations, int32 accumulation — the NM-Carus vmacc contract)
 and serves a stream of requests with continuous batching, comparing output
 agreement and weight-memory footprint against the bf16 baseline.  Every
 prefill/decode computation is dispatched as queued work through the async
-:class:`repro.nmc.runtime.DispatchQueue` (DESIGN.md §5.2), so admission
-launches overlap on the device and the host blocks only at future
-resolution.
+:class:`repro.nmc.DispatchQueue` from the one public ``repro.nmc``
+surface (DESIGN.md §5.2/§7), so admission launches overlap on the device
+and the host blocks only at future resolution.
 
 Run:  PYTHONPATH=src python examples/serve_nmc.py
 """
@@ -16,6 +16,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import nmc
 from repro.configs import base as cb
 from repro.models import lm
 from repro.serve.engine import Request, ServeEngine, quantize_params
@@ -40,7 +41,11 @@ def main():
     outs = {}
     for name, (c, p) in {"bf16": (cfg, params),
                          "nmc-w8a8": (qcfg, qparams)}.items():
-        eng = ServeEngine(c, p, n_slots=2, max_len=64)
+        # one dispatch queue per engine so the queued-work counter below is
+        # per-run; without the argument both would share the process-wide
+        # nmc.default_runtime() queue
+        eng = ServeEngine(c, p, n_slots=2, max_len=64,
+                          nmc_queue=nmc.DispatchQueue())
         for i, pr in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=pr, max_new=8))
         done = sorted(eng.run(), key=lambda r: r.rid)

@@ -1,23 +1,31 @@
 """Kernel library: the paper's benchmark suite for NM-Caesar and NM-Carus.
 
-Each builder returns a :class:`KernelBuild` holding, for one kernel instance
-(shape x element width):
+Since the traced-frontend redesign (DESIGN.md §7) every builder is an
+ordinary numpy-style kernel function compiled through
+:mod:`repro.nmc.frontend`: the function is traced once per engine, the
+tracer's eager ``alu.*_np`` evaluation *is* the quantized oracle, and the
+per-engine lowerings emit the same instruction structure the hand-written
+builders used to:
 
-* a NM-Caesar instruction stream + initial memory image + output location,
-* a NM-Carus xvnmc issue trace + initial VRF image + output registers,
-* a pure-numpy quantized oracle (two's complement, wrap at SEW), and
-* bookkeeping used by the timing/energy models (#outputs, host-side work).
-
-Data placement mirrors the paper's setups:
-* Caesar operands are placed in opposite banks so sustained throughput is one
-  op per 2 cycles (Section III-A2); conv2d uses host-prepared byte-shifted
-  input replicas (the standard packed-SIMD alignment trick; cf. the C-SRAM
-  comparison's data-replication remark, Table VII).
-* Carus chunks operands across vector registers and iterates with the
-  *indirect register addressing* template of Section III-B1.
+* NM-Caesar operands land in opposite banks (loads in bank 1; constants,
+  outputs and temporaries in bank 0) so sustained throughput is one op per
+  2 cycles (Section III-A2); conv2d's shifted-replica trick falls out of
+  ``slide_down`` on loaded values (the packed-SIMD alignment trick; cf. the
+  C-SRAM comparison's data-replication remark, Table VII).
+* NM-Carus chunks operands across vector registers and iterates with the
+  *indirect register addressing* template of Section III-B1; ``t.consts``
+  taps (matmul A entries, conv filter weights) are read through EMVX
+  exactly like the eCPU does.
 * Max-pooling's horizontal reduction runs on the host CPU / eCPU (Section
   V-B1: "the lack of subword reduction operations ... requires horizontal
   pooling to be implemented in software") and is accounted as host cycles.
+
+Each builder returns a :class:`KernelBuild` holding, per engine, the
+lowered instruction stream + initial memory image + output location and
+the numpy oracle.  :class:`EngineBuild` / :class:`KernelBuild` are kept as
+thin shims over the frontend's :class:`repro.nmc.frontend.LoweredKernel`
+so the pool/runtime/timing/energy layers and hand-constructed test builds
+keep one artifact type.
 
 Kernel default shapes follow Table V footnotes (a-g).
 """
@@ -30,13 +38,11 @@ from typing import Callable
 import numpy as np
 
 from repro.core import alu
-from repro.core import constants as C
-from repro.core import isa
-from repro.core.isa import CaesarOp, VOp
-from repro.nmc.program import Program, caesar_entry, carus_entry
+from repro.nmc import frontend
+from repro.nmc.frontend import mac as _mac
+from repro.nmc.program import Program, carus_entry
 
-# Builders emit unified-IR entries (DESIGN.md §5); `trace_entry` is kept as a
-# local alias so the Carus instruction templates below read like the paper.
+# Legacy alias: hand-built test traces still use this entry helper.
 trace_entry = carus_entry
 
 DTYPES = alu.NP_DTYPES
@@ -86,18 +92,18 @@ def _kernel_build(name: str, sew: int, caesar_pack, carus_pack) -> KernelBuild:
     return KernelBuild(name, sew, n_out, orc_k, cz, kz)
 
 
-def _wrap(x: np.ndarray, sew: int) -> np.ndarray:
-    return x.astype(np.int64).astype(DTYPES[sew])
-
-
-def _splat_word(val: int, sew: int) -> int:
-    """Replicate a SEW-bit value across a 32-bit word (host-side helper)."""
-    v = int(np.int64(val) & ((1 << sew) - 1))
-    w = 0
-    for k in range(32 // sew):
-        w |= v << (sew * k)
-    w &= 0xFFFFFFFF
-    return w - (1 << 32) if w >= (1 << 31) else w
+def _traced_build(kfn, args, engine: str, sew: int, host_cycles: float = 0.0,
+                  post_wrap: Callable | None = None) -> tuple:
+    """Trace + lower a frontend kernel for one engine; shim the result into
+    an :class:`EngineBuild` (optionally composing a host-side finishing
+    stage after the frontend's extraction ``post``)."""
+    lk = frontend.jit(kfn, engine=engine, sew=sew).lower(*args)
+    post = lk.post if post_wrap is None \
+        else (lambda e, _p=lk.post, _w=post_wrap: _w(_p(e)))
+    eb = EngineBuild(list(lk.stream), lk.mem, lk.out_slice,
+                     host_cycles=host_cycles, ecpu_instrs=lk.ecpu_instrs,
+                     post=post)
+    return eb, np.asarray(lk.oracle)
 
 
 def _rng(seed):
@@ -113,45 +119,28 @@ def _rand(rng, shape, sew):
 # Element-wise kernels: XOR / ADD / MUL / ReLU / Leaky-ReLU
 # ---------------------------------------------------------------------------
 
-_EW_OPS: dict[str, tuple[CaesarOp, VOp, Callable]] = {
-    "xor": (CaesarOp.XOR, VOp.VXOR, lambda a, b: a ^ b),
-    "add": (CaesarOp.ADD, VOp.VADD, lambda a, b: a + b),
-    "mul": (CaesarOp.MUL, VOp.VMUL, lambda a, b: a * b),
+_EW_OPS: dict[str, Callable] = {
+    "xor": lambda a, b: a ^ b,
+    "add": lambda a, b: a + b,
+    "mul": lambda a, b: a * b,
 }
 
 
 def build_elementwise(op_name: str, sew: int, caesar_bytes: int = 8 * 1024,
                       carus_bytes: int = 10 * 1024, seed: int = 0) -> KernelBuild:
-    cop, vop, fn = _EW_OPS[op_name]
+    fn = _EW_OPS[op_name]
     rng = _rng(seed)
 
     def make(nbytes, engine):
         n = nbytes // (sew // 8)
         a, b = _rand(rng, n, sew), _rand(rng, n, sew)
-        oracle = _wrap(fn(a.astype(np.int64), b.astype(np.int64)), sew)
-        nw = nbytes // 4
-        if engine == "caesar":
-            mem = np.zeros(C.CAESAR_MEM_BYTES // 4, np.int32)
-            s1, s2, d = 0, 4096, nw          # src1 bank0, src2 bank1, dst bank0
-            mem[s1:s1 + nw] = alu.pack_np(a)
-            mem[s2:s2 + nw] = alu.pack_np(b)
-            stream = [caesar_entry(cop, d + i, s1 + i, s2 + i)
-                      for i in range(nw)]
-            return EngineBuild(stream, mem, (d, nw)), oracle, n
-        # carus: chunk across registers, indirect template
-        rw = C.CARUS_REG_WORDS
-        n_chunks = -(-nw // rw)
-        vrf = np.zeros((C.CARUS_N_VREGS, rw), np.int32)
-        flat = vrf.reshape(-1)
-        flat[0:nw] = alu.pack_np(a)
-        flat[10 * rw:10 * rw + nw] = alu.pack_np(b)
-        vlmax = rw * (32 // sew)
-        ents = [trace_entry(VOp.VSETVL, sval1=vlmax)]
-        for i in range(n_chunks):
-            ents.append(trace_entry(
-                vop, sval2=isa.pack_indices(20 + i, 10 + i, i),
-                mode=isa.MODE_VV | isa.MODE_INDIRECT))
-        return EngineBuild(ents, vrf, (20 * rw, nw), ecpu_instrs=3), oracle, n
+
+        def kfn(t, x, y):
+            # operands in opposite banks: one op per 2 cycles sustained
+            t.store(fn(t.load(x, bank=0), t.load(y)))
+
+        eb, oracle = _traced_build(kfn, (a, b), engine, sew)
+        return eb, oracle, n
 
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
@@ -173,51 +162,14 @@ def build_relu(sew: int, caesar_bytes: int = 8 * 1024,
     def make(nbytes, engine):
         n = nbytes // (sew // 8)
         x = _rand(rng, n, sew)
-        if leaky_shift == 0:
-            oracle = np.maximum(x, 0)
-        else:
-            oracle = np.maximum(x, (x >> leaky_shift)).astype(DTYPES[sew])
-        nw = nbytes // 4
-        if engine == "caesar":
-            mem = np.zeros(C.CAESAR_MEM_BYTES // 4, np.int32)
-            s, d, zero_addr, t = 4096, nw, 0, 16     # src bank1; consts+scratch
-            mem[s:s + nw] = alu.pack_np(x)           # bank0: zero@0, shift@1,
-            assert d + nw <= 4096                    # scratch@16..31, dst@nw..
-            stream = []
-            for i in range(nw):
-                if leaky_shift == 0:
-                    stream.append(caesar_entry(CaesarOp.MAX, d + i, s + i,
-                                               zero_addr))
-                else:
-                    mem[1] = _splat_word(leaky_shift, sew)
-                    stream.append(caesar_entry(CaesarOp.SRA, t + i % 16,
-                                               s + i, 1))
-                    stream.append(caesar_entry(
-                        CaesarOp.MAX, d + i, s + i,
-                        (t + i % 16) | 0))  # no same-bank penalty: t bank0, s bank1
-            return EngineBuild(stream, mem, (d, nw)), oracle, n
-        rw = C.CARUS_REG_WORDS
-        n_chunks = -(-nw // rw)
-        vrf = np.zeros((C.CARUS_N_VREGS, rw), np.int32)
-        vrf.reshape(-1)[:nw] = alu.pack_np(x)
-        vlmax = rw * (32 // sew)
-        ents = [trace_entry(VOp.VSETVL, sval1=vlmax)]
-        for i in range(n_chunks):
-            if leaky_shift == 0:
-                ents.append(trace_entry(
-                    VOp.VMAX, sval1=0,
-                    sval2=isa.pack_indices(16 + i, i, 0),
-                    mode=isa.MODE_VX | isa.MODE_INDIRECT))
-            else:
-                ents.append(trace_entry(
-                    VOp.VSRA, imm=leaky_shift,
-                    sval2=isa.pack_indices(16 + i, i, 0),
-                    mode=isa.MODE_VI | isa.MODE_INDIRECT))
-                ents.append(trace_entry(
-                    VOp.VMAX,
-                    sval2=isa.pack_indices(16 + i, i, 16 + i),
-                    mode=isa.MODE_VV | isa.MODE_INDIRECT))
-        return EngineBuild(ents, vrf, (16 * rw, nw), ecpu_instrs=3), oracle, n
+
+        def kfn(t, xa):
+            xv = t.load(xa)
+            t.store(xv.max(0) if leaky_shift == 0
+                    else xv.max(xv >> leaky_shift))
+
+        eb, oracle = _traced_build(kfn, (x,), engine, sew)
+        return eb, oracle, n
 
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
@@ -239,116 +191,33 @@ def build_matmul(sew: int, p: int | None = None, seed: int = 2,
     fixed-point scaling by powers-of-two-normalized integer constants)."""
     rng = _rng(seed)
     m, k = 8, 8
-    lanes = 32 // sew
 
-    def oracle_fn(A, B, C0):
-        P_ = _wrap(A.astype(np.int64) @ B.astype(np.int64), sew)
-        if not gemm:
-            return P_
-        t1 = _wrap(_wrap(P_.astype(np.int64) * alpha, sew) >> shift, sew)
-        t2 = _wrap(_wrap(C0.astype(np.int64) * beta, sew) >> shift, sew)
-        return _wrap(t1.astype(np.int64) + t2.astype(np.int64), sew)
-
-    def make_caesar(P):
+    def make(P, engine):
         A = _rand(rng, (m, k), sew)
         B = _rand(rng, (k, P), sew)
         C0 = _rand(rng, (m, P), sew) if gemm else np.zeros((m, P), DTYPES[sew])
-        oracle = oracle_fn(A, B, C0)
-        mem = np.zeros(C.CAESAR_MEM_BYTES // 4, np.int32)
-        row_w = P // lanes
-        # bank0: splatted A (m*k words), constants, C; bank1: B (+ C0 for gemm)
-        a_base, const_base, c_base, b_base = 0, 64, 128, 4096
-        for i in range(m):
-            for kk in range(k):
-                mem[a_base + i * k + kk] = _splat_word(A[i, kk], sew)
-        mem[const_base] = _splat_word(alpha, sew)
-        mem[const_base + 1] = _splat_word(beta, sew)
-        mem[const_base + 2] = _splat_word(shift, sew)
-        for r in range(k):
-            mem[b_base + r * row_w: b_base + (r + 1) * row_w] = \
-                alu.pack_np(B[r])
-        c0_base = b_base + k * row_w
-        if gemm:
-            for r in range(m):
-                mem[c0_base + r * row_w: c0_base + (r + 1) * row_w] = \
-                    alu.pack_np(C0[r])
-        stream = []
-        t = 2048  # scratch, bank0
-        for i in range(m):
-            for jw in range(row_w):
-                dest = c_base + i * row_w + jw
-                stream.append(caesar_entry(CaesarOp.MAC_INIT, 0,
-                                           a_base + i * k, b_base + jw))
-                for kk in range(1, k - 1):
-                    stream.append(caesar_entry(
-                        CaesarOp.MAC, 0, a_base + i * k + kk,
-                        b_base + kk * row_w + jw))
-                stream.append(caesar_entry(
-                    CaesarOp.MAC_STORE, dest if not gemm else t,
-                    a_base + i * k + (k - 1), b_base + (k - 1) * row_w + jw))
+
+        def kfn(t, A, B, C0):
+            # A entries are scalar taps (EMVX reads / splat words); B rows
+            # are resident vectors — the first tap is a mul, the rest
+            # accumulate (MAC_INIT/MAC/MAC_STORE on Caesar, in-place
+            # VMUL/VMACC.vx on Carus)
+            a = t.consts(A)
+            rows = [t.load(B[r]) for r in range(k)]
+            c0 = [t.load(C0[r]) for r in range(m)] if gemm else None
+            for i in range(m):
+                acc = None
+                for kk in range(k):
+                    acc = _mac(acc, a[i, kk], rows[kk])
                 if gemm:
-                    stream.append(caesar_entry(CaesarOp.MUL, t + 1, t,
-                                               const_base))
-                    stream.append(caesar_entry(CaesarOp.SRA, t + 2, t + 1,
-                                               const_base + 2))
-                    stream.append(caesar_entry(CaesarOp.MUL, t + 3,
-                                               c0_base + i * row_w + jw,
-                                               const_base + 1))
-                    stream.append(caesar_entry(CaesarOp.SRA, t + 4, t + 3,
-                                               const_base + 2))
-                    stream.append(caesar_entry(CaesarOp.ADD, dest, t + 2,
-                                               t + 4))
-        post = lambda e: e.reshape(m, row_w * lanes)[:, :P]
-        return EngineBuild(stream, mem, (c_base, m * row_w), post=post), \
-            oracle, m * P
+                    acc = ((acc * alpha) >> shift) + ((c0[i] * beta) >> shift)
+                t.store(acc)
 
-    def make_carus(P):
-        A = _rand(rng, (m, k), sew)
-        B = _rand(rng, (k, P), sew)
-        C0 = _rand(rng, (m, P), sew) if gemm else np.zeros((m, P), DTYPES[sew])
-        oracle = oracle_fn(A, B, C0)
-        rw = C.CARUS_REG_WORDS
-        row_regs = -(-P // (rw * lanes))   # registers per row (1 at paper sizes)
-        assert row_regs == 1, "paper shapes fit one register per row"
-        vrf = np.zeros((C.CARUS_N_VREGS, rw), np.int32)
-        for r in range(k):
-            vrf[r, :P // lanes] = alu.pack_np(B[r])
-        c_regs = 8
-        if gemm:
-            for r in range(m):
-                vrf[16 + r, :P // lanes] = alu.pack_np(C0[r])
-        vrf[31, :m * k // lanes] = alu.pack_np(A.reshape(-1))
-        ents = [trace_entry(VOp.VSETVL, sval1=P)]
-        for i in range(m):
-            for kk in range(k):
-                # eCPU reads A[i,k] from v31 (emvx), then issues vmul/vmacc.vx
-                # (first tap uses vmul — no separate accumulator init needed)
-                ents.append(trace_entry(VOp.EMVX, vs2=31, sval1=i * k + kk))
-                op = VOp.VMUL if kk == 0 else VOp.VMACC
-                ents.append(trace_entry(op, vd=c_regs + i, vs2=kk,
-                                        sval1=int(A[i, kk]),
-                                        mode=isa.MODE_VX))
-            if gemm:
-                ents.append(trace_entry(VOp.VMUL, vd=c_regs + i,
-                                        vs2=c_regs + i, sval1=alpha,
-                                        mode=isa.MODE_VX))
-                ents.append(trace_entry(VOp.VSRA, vd=c_regs + i,
-                                        vs2=c_regs + i, imm=shift,
-                                        mode=isa.MODE_VI))
-                ents.append(trace_entry(VOp.VMUL, vd=16 + i, vs2=16 + i,
-                                        sval1=beta, mode=isa.MODE_VX))
-                ents.append(trace_entry(VOp.VSRA, vd=16 + i, vs2=16 + i,
-                                        imm=shift, mode=isa.MODE_VI))
-                ents.append(trace_entry(VOp.VADD, vd=c_regs + i,
-                                        vs2=c_regs + i, vs1=16 + i,
-                                        mode=isa.MODE_VV))
-        out_words = m * rw
-        post = lambda e: e.reshape(m, rw * lanes)[:, :P]
-        return EngineBuild(ents, vrf, (c_regs * rw, out_words),
-                           ecpu_instrs=3, post=post), oracle, m * P
+        eb, oracle = _traced_build(kfn, (A, B, C0), engine, sew)
+        return eb, oracle, m * P
 
-    cz, orc_c, _ = make_caesar(p or CAESAR_MATMUL_P[sew])
-    kz, orc_k, n_out = make_carus(p or CARUS_MATMUL_P[sew])
+    cz, orc_c, _ = make(p or CAESAR_MATMUL_P[sew], "caesar")
+    kz, orc_k, n_out = make(p or CARUS_MATMUL_P[sew], "carus")
     return _kernel_build("gemm" if gemm else "matmul", sew,
                          (cz, orc_c), (kz, orc_k, n_out))
 
@@ -365,101 +234,35 @@ def build_conv2d(sew: int, n: int | None = None, f: int | None = None,
                  seed: int = 3) -> KernelBuild:
     rng = _rng(seed)
     rows = 8
-    lanes = 32 // sew
 
-    def conv_oracle(A, F):
-        out_r, out_c = rows - F.shape[0] + 1, A.shape[1] - F.shape[1] + 1
-        out = np.zeros((out_r, out_c), np.int64)
-        for di in range(F.shape[0]):
-            for dj in range(F.shape[1]):
-                out += (A[di:di + out_r, dj:dj + out_c].astype(np.int64)
-                        * int(F[di, dj]))
-        return _wrap(out, sew)
-
-    def make_caesar(nn, ff):
+    def make(nn, ff, engine):
         A = _rand(rng, (rows, nn), sew)
         F = _rand(rng, (ff, ff), sew)
-        oracle = conv_oracle(A, F)
-        out_c = nn - ff + 1
-        out_w = -(-out_c // lanes)
-        row_w = nn // lanes
-        mem = np.zeros(C.CAESAR_MEM_BYTES // 4, np.int32)
-        # bank1: byte-shifted replicas of A (lane-alignment trick)
-        rep_base = 4096
-        rep = {}
-        for dj in range(ff):
-            base = rep_base + dj * rows * row_w
-            rep[dj] = base
-            shifted = np.zeros((rows, row_w * lanes), DTYPES[sew])
-            shifted[:, :nn - dj] = A[:, dj:]
-            for r in range(rows):
-                mem[base + r * row_w: base + (r + 1) * row_w] = \
-                    alu.pack_np(shifted[r, :row_w * lanes])
-        # bank0: splatted filter taps + output
-        f_base, c_base = 0, 64
-        for di in range(ff):
-            for dj in range(ff):
-                mem[f_base + di * ff + dj] = _splat_word(F[di, dj], sew)
-        stream = []
-        out_r = rows - ff + 1
-        for i in range(out_r):
-            for jw in range(out_w):
-                first = True
+        out_r, out_c = rows - ff + 1, nn - ff + 1
+
+        def kfn(t, A, F):
+            # filter taps as scalar consts; column offsets via slide_down —
+            # VSLIDEDOWN on Carus, host-prepared byte-shifted replicas on
+            # Caesar (slides of loaded values lower to data replication)
+            fw = t.consts(F)
+            av = [t.load(A[r]) for r in range(rows)]
+            sh = {(dj, r): av[r].slide_down(dj)
+                  for dj in range(1, ff) for r in range(rows)}
+            for i in range(out_r):
+                acc = None
                 for di in range(ff):
                     for dj in range(ff):
-                        src1 = f_base + di * ff + dj
-                        src2 = rep[dj] + (i + di) * row_w + jw
-                        last = (di == ff - 1 and dj == ff - 1)
-                        opc = (CaesarOp.MAC_INIT if first else
-                               (CaesarOp.MAC_STORE if last else CaesarOp.MAC))
-                        stream.append(caesar_entry(
-                            opc, c_base + i * out_w + jw if last else 0,
-                            src1, src2))
-                        first = False
-        post = lambda e: e.reshape(out_r, out_w * lanes)[:, :out_c]
-        return (EngineBuild(stream, mem, (c_base, out_r * out_w), post=post),
-                oracle, out_r * out_c, out_w, out_c)
+                        src = av[i + di] if dj == 0 else sh[(dj, i + di)]
+                        acc = _mac(acc, fw[di, dj], src)
+                t.store(acc, n=out_c)     # 'valid' width
 
-    def make_carus(nn, ff):
-        A = _rand(rng, (rows, nn), sew)
-        F = _rand(rng, (ff, ff), sew)
-        oracle = conv_oracle(A, F)
-        rw = C.CARUS_REG_WORDS
-        vrf = np.zeros((C.CARUS_N_VREGS, rw), np.int32)
-        for r in range(rows):
-            vrf[r, :nn // lanes] = alu.pack_np(A[r])
-        out_r = rows - ff + 1
-        ents = [trace_entry(VOp.VSETVL, sval1=nn)]
-        # slid copies: v[8 + (dj-1)*rows + r] = slidedown(v[r], dj)
-        for dj in range(1, ff):
-            for r in range(rows):
-                ents.append(trace_entry(VOp.VSLIDEDOWN,
-                                        vd=8 + (dj - 1) * rows + r, vs2=r,
-                                        sval1=dj, mode=isa.MODE_VX))
-        c0 = 8 + (ff - 1) * rows
-        fflat = F.reshape(-1)
-        fw = alu.pack_np(np.pad(fflat, (0, (-len(fflat)) % lanes)))
-        vrf[31, :len(fw)] = fw
-        for i in range(out_r):
-            for di in range(ff):
-                for dj in range(ff):
-                    src = (i + di) if dj == 0 else 8 + (dj - 1) * rows + (i + di)
-                    ents.append(trace_entry(VOp.EMVX, vs2=31,
-                                            sval1=di * ff + dj))
-                    op = VOp.VMUL if (di == 0 and dj == 0) else VOp.VMACC
-                    ents.append(trace_entry(op, vd=c0 + i, vs2=src,
-                                            sval1=int(F[di, dj]),
-                                            mode=isa.MODE_VX))
-        out_c = nn - ff + 1
-        post = lambda e: e.reshape(out_r, rw * lanes)[:, :out_c]
-        return (EngineBuild(ents, vrf, (c0 * rw, out_r * rw), ecpu_instrs=3,
-                            post=post),
-                oracle, out_r * out_c, c0)
+        eb, oracle = _traced_build(kfn, (A, F), engine, sew)
+        return eb, oracle, out_r * out_c
 
     nn_c, ff_c = (n, f) if n else CAESAR_CONV[sew]
     nn_k, ff_k = (n, f) if n else CARUS_CONV[sew]
-    cz, orc_c, _, _, _ = make_caesar(nn_c, ff_c)
-    kz, orc_k, n_out, _ = make_carus(nn_k, ff_k)
+    cz, orc_c, _ = make(nn_c, ff_c, "caesar")
+    kz, orc_k, n_out = make(nn_k, ff_k, "carus")
     return _kernel_build("conv2d", sew, (cz, orc_c), (kz, orc_k, n_out))
 
 
@@ -471,10 +274,8 @@ def build_maxpool(sew: int, caesar_bytes: int = 8 * 1024,
                   carus_bytes: int = 16 * 1024, seed: int = 4,
                   width: int = 128) -> KernelBuild:
     rng = _rng(seed)
-    lanes = 32 // sew
 
     def pool_oracle(X):
-        r, c = X.shape
         v = np.maximum(X[0::2], X[1::2])
         return np.maximum(v[:, 0::2], v[:, 1::2]).astype(DTYPES[sew])
 
@@ -490,50 +291,28 @@ def build_maxpool(sew: int, caesar_bytes: int = 8 * 1024,
         rows_n = n // width
         X = _rand(rng, (rows_n, width), sew)
         oracle = pool_oracle(X)
+        n_out = (rows_n // 2) * (width // 2)
+        even = np.ascontiguousarray(X[0::2]).reshape(-1)
+        odd = np.ascontiguousarray(X[1::2]).reshape(-1)
 
-        def post(vert_elems: np.ndarray) -> np.ndarray:
-            v = vert_elems.reshape(rows_n // 2, width)
+        def kfn(t, e, o):
+            # vertical stage on the NMC engine (even rows bank 0, odd rows
+            # bank 1 on Caesar: no same-bank conflicts)
+            t.store(t.load(e, bank=0).max(t.load(o)))
+
+        def horiz(v):
+            v = np.asarray(v).reshape(rows_n // 2, width)
             return np.maximum(v[:, 0::2], v[:, 1::2]).astype(DTYPES[sew])
 
-        row_w = width // lanes
-        n_out = (rows_n // 2) * (width // 2)
-        if engine == "caesar":
-            mem = np.zeros(C.CAESAR_MEM_BYTES // 4, np.int32)
-            # even rows bank0, odd rows bank1 => no same-bank conflicts
-            e_base, o_base, d_base = 0, 4096, 2048
-            for r in range(rows_n // 2):
-                mem[e_base + r * row_w:(e_base + (r + 1) * row_w)] = \
-                    alu.pack_np(X[2 * r])
-                mem[o_base + r * row_w:(o_base + (r + 1) * row_w)] = \
-                    alu.pack_np(X[2 * r + 1])
-            stream = [caesar_entry(CaesarOp.MAX, d_base + i, e_base + i,
-                                   o_base + i)
-                      for i in range((rows_n // 2) * row_w)]
-            return (EngineBuild(stream, mem, (d_base, (rows_n // 2) * row_w),
-                                host_cycles=n_out * horiz_cpu, post=post),
-                    oracle, n_out)
-        rw = C.CARUS_REG_WORDS
-        rows_per_reg = rw * lanes // width
-        n_regs_half = -(-(rows_n // 2) // rows_per_reg)
-        vrf = np.zeros((C.CARUS_N_VREGS, rw), np.int32)
-        even = X[0::2].reshape(-1)
-        odd = X[1::2].reshape(-1)
-        vrf.reshape(-1)[:len(even) // lanes] = alu.pack_np(even)
-        vrf.reshape(-1)[10 * rw:10 * rw + len(odd) // lanes] = alu.pack_np(odd)
-        vlmax = rw * lanes
-        ents = [trace_entry(VOp.VSETVL, sval1=vlmax)]
-        for i in range(n_regs_half):
-            ents.append(trace_entry(
-                VOp.VMAX, sval2=isa.pack_indices(20 + i, 10 + i, i),
-                mode=isa.MODE_VV | isa.MODE_INDIRECT))
-        return (EngineBuild(ents, vrf, (20 * rw, len(even) // lanes),
-                            host_cycles=n_out * horiz_ecpu,
-                            ecpu_instrs=3, post=post), oracle, n_out)
+        hc = n_out * (horiz_cpu if engine == "caesar" else horiz_ecpu)
+        eb, _vert = _traced_build(kfn, (even, odd), engine, sew,
+                                  host_cycles=hc, post_wrap=horiz)
+        return eb, oracle, n_out
 
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
-    # engine oracles: vertical-stage outputs live in NMC memory; full pooled
-    # oracle (orc_*) includes host horizontal stage.
+    # engine oracles: the full pooled output (vertical stage on the NMC
+    # engine + horizontal host stage applied by the composed post)
     return _kernel_build("maxpool", sew, (cz, orc_c), (kz, orc_k, n_out))
 
 

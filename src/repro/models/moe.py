@@ -1,6 +1,6 @@
 """Mixture-of-Experts with expert parallelism over the `model` mesh axis.
 
-Design (DESIGN.md §7): activations enter the MoE block replicated across the
+Design (DESIGN.md §8): activations enter the MoE block replicated across the
 `model` axis (the attention output all-reduce already paid for that), and
 each model shard owns E / model_size experts.  Dispatch is therefore fully
 local — a capacity-bounded scatter into an (E_local, cap, d) buffer — and the

@@ -1,18 +1,37 @@
-"""Unified NMC program IR + batched multi-tile execution (DESIGN.md §5).
+"""The NMC stack behind one import: ``from repro import nmc`` (DESIGN.md §5/§7).
 
-* :mod:`repro.nmc.program` — the engine-agnostic structured-array Program IR
-  covering NM-Caesar bus-op streams and NM-Carus xvnmc issue traces, plus
-  the padding NOP and the power-of-two instruction-bucket rule.
-* :mod:`repro.nmc.engine` — the Engine protocol (lower / run / extract /
-  cost) and the two tile adapters over the functional simulators.
-* :mod:`repro.nmc.pool` — the vmapped executors: exact-shape :class:`TilePool`,
-  the shape-bucketed :class:`BucketedPool` (one jit compile per
-  ``(engine, sew, instr-bucket, tile-bucket)``) and the persistently-resident
-  :class:`ResidentPool` (tile memories stay on device across dispatches).
+Authoring — write numpy-style Python, get the whole stack::
+
+    from repro import nmc
+
+    @nmc.kernel                       # trace + engine auto-selection, SEW 8
+    def fused(t, x, y):
+        t.store((t.load(x) * 3 + t.load(y)).max(0))
+
+    out = fused(xs, ys)               # sync: lower, schedule, run, extract
+    fut = fused.call_async(xs, ys)    # async future — bit-exact vs sync
+
+Layers (each usable directly for expert control):
+
+* :mod:`repro.nmc.frontend` — the traced frontend: :func:`kernel` /
+  :func:`jit` compile a Python function over :class:`NmcValue` tracers
+  into a :class:`CompiledKernel`; engine auto-selection with
+  :class:`UnsupportedOnEngine` diagnostics.
+* :mod:`repro.nmc.registry` — the op registry and the shared
+  :class:`NmcRuntime` (one bucketed jit cache for sync + async dispatch).
+* :mod:`repro.nmc.program` — the engine-agnostic structured-array
+  :class:`Program` IR covering NM-Caesar bus-op streams and NM-Carus
+  xvnmc issue traces, plus the padding NOP and bucket rules.
+* :mod:`repro.nmc.engine` — the :class:`Engine` protocol (lower / run /
+  extract / cost) and the two tile adapters over the functional
+  simulators.
+* :mod:`repro.nmc.pool` — the vmapped executors: exact-shape
+  :class:`TilePool`, shape-bucketed :class:`BucketedPool` (one XLA
+  compile per ``(engine, sew, instr-bucket, tile-bucket)``) and the
+  persistently-resident :class:`ResidentPool`.
 * :mod:`repro.nmc.runtime` — the async double-buffered
-  :class:`DispatchQueue`: futures over queued (tile, program, image,
-  out_slice) work items, shadow-buffer staging while the previous program
-  runs, and pluggable in-order/overlapped scheduling (DESIGN.md §5.2).
+  :class:`DispatchQueue`: futures, shadow-buffer staging, batched launch
+  waves (DESIGN.md §5.2).
 """
 
 from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
@@ -20,11 +39,27 @@ from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
 from repro.nmc.engine import CaesarTile, CarusTile, Engine, get_engine
 from repro.nmc.pool import BucketedPool, ResidentPool, TilePool, tile_bucket
 from repro.nmc.runtime import DeviceFuture, DispatchQueue, NMCFuture
+from repro.nmc.registry import (NmcRuntime, default_runtime,
+                                set_default_runtime)
+from repro.nmc.frontend import (CompiledKernel, LoweredKernel, LoweringError,
+                                NmcValue, ProgramBuilder, TileContext,
+                                UnsupportedOnEngine, jit, kernel, mac,
+                                select_engine)
 
 __all__ = [
+    # the one-call frontend (DESIGN.md §7)
+    "jit", "kernel", "mac", "CompiledKernel", "LoweredKernel", "NmcValue",
+    "ProgramBuilder", "TileContext", "UnsupportedOnEngine", "LoweringError",
+    "select_engine",
+    # shared execution runtime
+    "NmcRuntime", "default_runtime", "set_default_runtime",
+    # unified program IR
     "PROG_DTYPE", "Program", "caesar_entry", "carus_entry", "nop_entry",
     "instr_bucket", "stack_programs",
+    # engines
     "CaesarTile", "CarusTile", "Engine", "get_engine",
+    # pools / scheduler
     "TilePool", "BucketedPool", "ResidentPool", "tile_bucket",
+    # async dispatch runtime
     "DispatchQueue", "NMCFuture", "DeviceFuture",
 ]

@@ -1,0 +1,113 @@
+"""Op registry + shared execution runtime for the traced NMC frontend.
+
+Two registries back :mod:`repro.nmc.frontend` (DESIGN.md §7):
+
+* **Op registry** — one :class:`OpSpec` per tracer-level operation, naming
+  the pure-numpy lane semantics (``repro.core.alu.lane_binop_np``), the
+  NM-Caesar bus micro-op and the NM-Carus ``xvnmc`` funct6 it lowers to.
+  ``caesar_op is None`` marks an op that is *not bus-expressible*
+  (e.g. unsigned min/max): the frontend's engine auto-selection consults
+  exactly this table, and an explicit ``engine="caesar"`` request raises
+  :class:`repro.nmc.frontend.UnsupportedOnEngine` naming the op.
+* **Runtime registry** — the process-wide :class:`NmcRuntime` every
+  :class:`repro.nmc.frontend.CompiledKernel` dispatches through by default:
+  one shared :class:`repro.nmc.pool.BucketedPool` jit cache (one XLA
+  compile per ``(engine, sew, instr-bucket, tile-bucket)``) under a
+  :class:`repro.nmc.pool.ResidentPool` and its
+  :class:`repro.nmc.runtime.DispatchQueue`.  Every kernel call — sync or
+  async — submits to the queue on the shared ``jit_tile`` (a synchronous
+  call simply resolves its future immediately), so both call styles share
+  one code path, one jit cache, and are bit-exact equal by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.isa import CaesarOp, VOp
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One tracer-level elementwise op and its per-engine lowering."""
+
+    name: str                          # alu lane-op name (= tracer op name)
+    caesar_op: Optional[CaesarOp]      # bus micro-op; None = not expressible
+    carus_vop: Optional[VOp]           # xvnmc funct6
+    carus_imm: bool = False            # int scalar lowers to MODE_VI (imm5)
+
+    @property
+    def on_caesar(self) -> bool:
+        return self.caesar_op is not None
+
+
+#: Elementwise binary ops the tracer records (vector-vector or
+#: vector-scalar).  ``mac`` / ``slide_down`` are structural ops handled by
+#: the lowerings directly (accumulator chains / data movement, not lane
+#: arithmetic), so they live outside this table.
+BINOPS: dict[str, OpSpec] = {s.name: s for s in (
+    OpSpec("add", CaesarOp.ADD, VOp.VADD),
+    OpSpec("sub", CaesarOp.SUB, VOp.VSUB),
+    OpSpec("mul", CaesarOp.MUL, VOp.VMUL),
+    OpSpec("and", CaesarOp.AND, VOp.VAND),
+    OpSpec("or", CaesarOp.OR, VOp.VOR),
+    OpSpec("xor", CaesarOp.XOR, VOp.VXOR),
+    OpSpec("min", CaesarOp.MIN, VOp.VMIN),
+    OpSpec("max", CaesarOp.MAX, VOp.VMAX),
+    # unsigned compares exist only in the xvnmc vector ISA (Table III);
+    # NM-Caesar's bus ALU has signed MIN/MAX only (Section III-A2)
+    OpSpec("minu", None, VOp.VMINU),
+    OpSpec("maxu", None, VOp.VMAXU),
+    OpSpec("sll", CaesarOp.SLL, VOp.VSLL, carus_imm=True),
+    OpSpec("srl", CaesarOp.SLR, VOp.VSRL, carus_imm=True),
+    OpSpec("sra", CaesarOp.SRA, VOp.VSRA, carus_imm=True),
+)}
+
+
+class NmcRuntime:
+    """Shared execution stack for compiled kernels (DESIGN.md §7).
+
+    Holds the three scheduler layers as one object so every kernel compiled
+    by :func:`repro.nmc.frontend.jit` reuses one jit cache:
+
+    * ``bucketed`` — the shape-bucketed compile cache (donated state),
+    * ``resident`` — the device-resident tile array under the queue,
+    * ``queue``    — the double-buffered dispatch queue all kernel calls
+      submit to (sync calls resolve their future immediately; async ones
+      return it) — bit-exact either way (tests/test_frontend.py).
+    """
+
+    def __init__(self, mode: str = "overlapped"):
+        from repro.nmc.pool import BucketedPool, ResidentPool
+        from repro.nmc.runtime import DispatchQueue
+
+        self.bucketed = BucketedPool(donate=True)
+        self.resident = ResidentPool(pool=self.bucketed)
+        self.queue = DispatchQueue(pool=self.resident, mode=mode)
+
+    #: The tile compiled kernels dispatch on.  One shared tile keeps the
+    #: resident device state bounded (one buffer, re-installed per call)
+    #: instead of leaking a tile memory per kernel invocation; per-tile
+    #: FIFO order makes arbitrarily many in-flight futures safe — each
+    #: captures its own wave's final state.
+    jit_tile = ("jit", "shared")
+
+
+_DEFAULT: Optional[NmcRuntime] = None
+
+
+def default_runtime() -> NmcRuntime:
+    """The process-wide runtime ``CompiledKernel`` dispatches through."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = NmcRuntime()
+    return _DEFAULT
+
+
+def set_default_runtime(rt: Optional[NmcRuntime]) -> Optional[NmcRuntime]:
+    """Swap the process-wide runtime (``None`` resets to a fresh one on
+    next use); returns the previous runtime so callers can restore it."""
+    global _DEFAULT
+    old, _DEFAULT = _DEFAULT, rt
+    return old

@@ -11,11 +11,14 @@ batch of S slots; finished sequences free their slot, queued requests are
 prefilled into it (prefill at batch 1 here; production would chunk).
 
 All device work — prefill admission and decode steps — is dispatched as
-queued work through a :class:`repro.nmc.runtime.DispatchQueue` (with
-``nmc_mode='w8a8'`` those are exactly the int8 NMC projections): the queue
-launches the computations asynchronously and the engine blocks only at
-future resolution, so a batch of admissions issues all its prefills before
-the first host-side cache merge (DESIGN.md §5.2).
+queued work through an :class:`repro.nmc.DispatchQueue` from the curated
+``repro.nmc`` public surface (with ``nmc_mode='w8a8'`` those are exactly
+the int8 NMC projections): the queue launches the computations
+asynchronously and the engine blocks only at future resolution, so a
+batch of admissions issues all its prefills before the first host-side
+cache merge (DESIGN.md §5.2).  By default the engine joins the shared
+:func:`repro.nmc.default_runtime` queue, so serving traffic and
+``nmc.jit`` kernel calls drain through one dispatch discipline.
 """
 
 from __future__ import annotations
@@ -27,10 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import nmc
 from repro.models import layers as L
 from repro.models import lm
 from repro.models.config import ModelConfig
-from repro.nmc.runtime import DispatchQueue
+from repro.nmc import DispatchQueue
 
 
 def quantize_params(params: dict, cfg: ModelConfig) -> dict:
@@ -69,7 +73,7 @@ class ServeEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.nmc_queue = nmc_queue if nmc_queue is not None \
-            else DispatchQueue()
+            else nmc.default_runtime().queue
         self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
         self.prefill = jax.jit(make_prefill_step(cfg, max_len))
         self.caches = lm.init_caches(params, cfg, n_slots, max_len,
