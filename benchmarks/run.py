@@ -180,6 +180,25 @@ def main(smoke: bool = False) -> None:
                   f"staged_while_busy={queue.staged_while_busy - staged0},"
                   f"matmul_overlap_cycle_ratio={ovl / ser:.3f}"))
 
+    # -- Tile-parallel partitioned execution (DESIGN.md §9) -------------------
+    # One kernel sharded across the tile array: scaling.run asserts
+    # bit-exactness of every partitioned execution (sync + async gathers)
+    # vs the single-tile output, the compile bound (pre-padded waves land
+    # in one bucket each), and the wave-speedup shape of the shared-bus
+    # timing model (monotone to the peak, > 1 at tiles=4 on matmul).
+    from benchmarks import scaling
+    t0 = time.perf_counter()
+    rows_sc = scaling.run(smoke=True) if smoke else scaling.run(
+        tiles=(1, 2, 4, 8), sews=(8,),
+        kernels=("mul", "matmul", "conv2d"))
+    scaling_wall_s = time.perf_counter() - t0
+    sc = rows_sc[-1]
+    n_cfg = len(rows_sc) - 1
+    lines.append(("nmc_scaling", scaling_wall_s * 1e6 / max(n_cfg, 1),
+                  f"bitexact=True,configs={n_cfg},"
+                  f"compiles={sc['compiles']},buckets={sc['buckets']},"
+                  f"matmul_speedup_at4={sc['matmul_speedup_at_4']:.2f}"))
+
     if not smoke:
         # -- Table VI -------------------------------------------------------
         ok = table_vi.functional_demo()

@@ -39,6 +39,15 @@ WORD_BYTES = 4
 # DMA legs of the dispatch-pipeline cost model (timing.dispatch_cycles).
 DMA_BYTES_PER_CYCLE = 4
 
+# Multi-tile system: the whole tile array hangs off ONE such bus (Fig. 1's
+# edge-node topology — N SRAM macros, one interconnect).  Concurrent tiles'
+# memory-mode DMA transfers therefore *serialize* on the bus while each
+# tile's compute-mode execution proceeds independently — the saturation
+# mechanism of the system-level scaling model (timing.wave_cycles): wave
+# speedup grows with the tile count until the serialized DMA stream, not
+# per-tile compute, binds the makespan.
+SYS_BUS_BYTES_PER_CYCLE = DMA_BYTES_PER_CYCLE
+
 # Derived VRF geometry: 32 KiB / 32 regs = 1 KiB per register (VLEN = 8192 b)
 CARUS_REG_BYTES = CARUS_MEM_BYTES // CARUS_N_VREGS
 CARUS_REG_WORDS = CARUS_REG_BYTES // WORD_BYTES          # 256 words

@@ -196,13 +196,21 @@ def dma_cycles(n_bytes: int) -> float:
 
 
 def stage_cost(eb, name: str = "") -> StageCost:
-    """StageCost of one (engine-tagged) EngineBuild: full-image load,
-    modeled program cycles (incl. host-side work), result-slice store."""
+    """StageCost of one (engine-tagged) EngineBuild: image load, modeled
+    program cycles (incl. host-side work), result-slice store.
+
+    Builds that record their allocator high-water (``used_words`` on
+    :class:`repro.nmc.frontend.LoweredKernel`) are charged only for the
+    words the tile image actually occupies — partitioned shards DMA their
+    slice of the data, not the whole 32 KiB macro.  Legacy builds without
+    the attribute keep the full-image cost."""
     prog = eb.program
     rep = program_cycles(prog, eb.host_cycles)
+    words = int(getattr(eb, "used_words", 0)) \
+        or int(np.asarray(eb.mem).size)
     return StageCost(
         name or f"{prog.engine}/{prog.sew}",
-        dma_in_cycles=dma_cycles(int(np.asarray(eb.mem).size) * C.WORD_BYTES),
+        dma_in_cycles=dma_cycles(words * C.WORD_BYTES),
         compute_cycles=rep.total_cycles,
         dma_out_cycles=dma_cycles(int(eb.out_slice[1]) * C.WORD_BYTES))
 
@@ -252,6 +260,57 @@ def dispatch_cycles(stages: list[StageCost], mode: str = "serial") -> float:
 def sweep_dispatch_cycles(builds: list, mode: str = "serial") -> float:
     """dispatch_cycles over a list of engine-tagged EngineBuilds."""
     return dispatch_cycles([stage_cost(eb) for eb in builds], mode)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tile system cost model: one shared bus, N overlapped tiles
+# ---------------------------------------------------------------------------
+
+def wave_cycles(stages: list[StageCost], n_tiles: int,
+                mode: str = "overlapped") -> float:
+    """Makespan of one partitioned wave on an ``n_tiles`` tile array.
+
+    The paper's edge-node topology hangs every tile's SRAM macro off one
+    32-bit system bus (``constants.SYS_BUS_BYTES_PER_CYCLE``), so the
+    model has N + 1 resources: the shared bus serializes **every** DMA leg
+    (stage images stream in submission order, result slices drain after
+    their compute), while each tile's compute engine runs independently —
+    stage ``i`` executes on tile ``i % n_tiles`` as soon as its image has
+    landed and the tile is free.
+
+    ``"serial"`` is the single-tile synchronous reference (every leg
+    serializes: ``sum(dma_in + compute + dma_out)``), so
+    ``wave_cycles(stages, 1, "serial") / wave_cycles(shards, N)`` is the
+    modeled wave speedup of a partitioned kernel.  The overlapped makespan
+    reproduces the paper's system-level scaling shape: speedup grows with
+    N while per-tile compute dominates and saturates once the serialized
+    bus stream binds (adding tiles then only adds queued DMA).
+    """
+    assert mode in ("serial", "overlapped"), mode
+    n_tiles = int(n_tiles)
+    assert n_tiles >= 1, n_tiles
+    if not stages:
+        return 0.0
+    if mode == "serial":
+        return sum(s.serial_cycles for s in stages)
+    bus = 0.0                          # shared system-bus timeline
+    tile_free = [0.0] * n_tiles        # per-tile compute timelines
+    comp_end: list[float] = []
+    for i, s in enumerate(stages):     # images stream in, bus-serialized
+        t = i % n_tiles
+        bus += s.dma_in_cycles
+        tile_free[t] = max(bus, tile_free[t]) + s.compute_cycles
+        comp_end.append(tile_free[t])
+    for i, s in enumerate(stages):     # result slices drain, bus-serialized
+        bus = max(bus, comp_end[i]) + s.dma_out_cycles
+    return max(bus, max(tile_free))
+
+
+def wave_speedup(single: StageCost, shards: list[StageCost],
+                 n_tiles: int) -> float:
+    """Modeled speedup of a partitioned wave over its unsharded single-tile
+    dispatch (both through the same two-resource bus/compute model)."""
+    return wave_cycles([single], 1) / wave_cycles(shards, n_tiles)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,9 @@ Authoring — write numpy-style Python, get the whole stack::
     out = fused(xs, ys)               # sync: lower, schedule, run, extract
     fut = fused.call_async(xs, ys)    # async future — bit-exact vs sync
 
+    wide = nmc.jit(fused.fn, tiles=4) # shard one kernel across 4 tiles
+    assert (wide(xs, ys) == out).all()  # bit-exact vs single-tile
+
 Layers (each usable directly for expert control):
 
 * :mod:`repro.nmc.frontend` — the traced frontend: :func:`kernel` /
@@ -32,25 +35,34 @@ Layers (each usable directly for expert control):
 * :mod:`repro.nmc.runtime` — the async double-buffered
   :class:`DispatchQueue`: futures, shadow-buffer staging, batched launch
   waves (DESIGN.md §5.2).
+* :mod:`repro.nmc.partition` — the tile-parallel partitioning planner
+  (DESIGN.md §9): shards one traced kernel across the tile array
+  (``nmc.jit(fn, tiles=N)``), reassembled by :class:`GatherFuture` —
+  bit-exact vs the single-tile path by construction.
 """
 
 from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
                                instr_bucket, nop_entry, stack_programs)
 from repro.nmc.engine import CaesarTile, CarusTile, Engine, get_engine
 from repro.nmc.pool import BucketedPool, ResidentPool, TilePool, tile_bucket
-from repro.nmc.runtime import DeviceFuture, DispatchQueue, NMCFuture
+from repro.nmc.runtime import (DeviceFuture, DispatchQueue, GatherFuture,
+                               NMCFuture)
 from repro.nmc.registry import (NmcRuntime, default_runtime,
                                 set_default_runtime)
 from repro.nmc.frontend import (CompiledKernel, LoweredKernel, LoweringError,
                                 NmcValue, ProgramBuilder, TileContext,
                                 UnsupportedOnEngine, jit, kernel, mac,
                                 select_engine)
+from repro.nmc.partition import (PartitionError, PartitionPlan,
+                                 plan as plan_partition)
 
 __all__ = [
     # the one-call frontend (DESIGN.md §7)
     "jit", "kernel", "mac", "CompiledKernel", "LoweredKernel", "NmcValue",
     "ProgramBuilder", "TileContext", "UnsupportedOnEngine", "LoweringError",
     "select_engine",
+    # tile-parallel partitioning planner (DESIGN.md §9)
+    "plan_partition", "PartitionPlan", "PartitionError",
     # shared execution runtime
     "NmcRuntime", "default_runtime", "set_default_runtime",
     # unified program IR
@@ -61,5 +73,5 @@ __all__ = [
     # pools / scheduler
     "TilePool", "BucketedPool", "ResidentPool", "tile_bucket",
     # async dispatch runtime
-    "DispatchQueue", "NMCFuture", "DeviceFuture",
+    "DispatchQueue", "NMCFuture", "DeviceFuture", "GatherFuture",
 ]

@@ -67,10 +67,11 @@ from repro.core import alu
 from repro.core import constants as C
 from repro.core import isa
 from repro.core.isa import CaesarOp, VOp
-from repro.nmc.program import Program, caesar_entry, carus_entry
+from repro.nmc.program import Program, caesar_entry, carus_entry, instr_bucket
 from repro.nmc.registry import BINOPS, NmcRuntime, default_runtime
 
 ENGINES = ("caesar", "carus")
+PARTITIONS = ("auto", "rows", "axis")
 
 _CAESAR_MEM_WORDS = C.CAESAR_MEM_BYTES // C.WORD_BYTES
 _CAESAR_BANK_WORDS = _CAESAR_MEM_WORDS // C.CAESAR_N_BANKS
@@ -486,6 +487,9 @@ class LoweredKernel:
     oracle: np.ndarray              # traced reference output (shaped)
     host_cycles: float = 0.0
     ecpu_instrs: int = 0
+    used_words: int = 0             # allocator high-water: words the tile
+                                    # image actually occupies (drives the
+                                    # DMA legs of the multi-tile bus model)
     _prog: Optional[Program] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -499,6 +503,13 @@ class LoweredKernel:
     @property
     def n_outputs(self) -> int:
         return int(self.oracle.size)
+
+    def pad_to(self, n_instr: int) -> None:
+        """NOP-pad the lowered program to ``n_instr`` entries — the
+        wave-level bucket alignment of partitioned shards (bit-exact and
+        zero-cost by the padding contract of :meth:`Program.pad_to`).
+        ``stream`` keeps the unpadded tape; ``program`` reflects the pad."""
+        self._prog = self.program.pad_to(n_instr)
 
 
 def _make_post(spans: list[tuple[int, int]], lanes: int, dtype) -> Callable:
@@ -713,8 +724,10 @@ class _CaesarLowering:
                             wref(x, w), wref(y, w)))
 
         post = _make_post(spans, self.lanes, dt)
+        used = b0.pos + (b1.pos - _CAESAR_BANK_WORDS)
         return LoweredKernel("caesar", self.sew, stream, mem,
-                             (out_base, out_words), post, b.oracle())
+                             (out_base, out_words), post, b.oracle(),
+                             used_words=used)
 
 
 class _Cursor:
@@ -974,9 +987,10 @@ class _CarusLowering:
                             mode=isa.MODE_VX | isa.MODE_INDIRECT))
 
         post = _make_post(spans, self.lanes, dt)
+        used = (temp.next + (C.CARUS_N_VREGS - cpool_top)) * self.rw
         return LoweredKernel("carus", self.sew, stream, vrf,
                              (0, out_words), post, b.oracle(),
-                             ecpu_instrs=3)
+                             ecpu_instrs=3, used_words=used)
 
 
 class _RegAlloc:
@@ -1012,6 +1026,27 @@ class _RegAlloc:
 _LOWERINGS = {"caesar": _CaesarLowering, "carus": _CarusLowering}
 
 
+def _check_engine(engine: str) -> str:
+    """Eager engine-name validation, shared by decoration-time kwargs and
+    per-call overrides (a typo must raise a named ValueError, never a
+    deep-stack KeyError)."""
+    if engine != "auto" and engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}: expected 'auto' or "
+                         f"one of {ENGINES}")
+    return engine
+
+
+def _check_tiles(tiles) -> int:
+    try:
+        n = int(tiles)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"tiles must be an int >= 1, got {tiles!r}") from None
+    if n < 1:
+        raise ValueError(f"tiles must be >= 1, got {n}")
+    return n
+
+
 class CompiledKernel:
     """A traced kernel bound to an engine policy and element width.
 
@@ -1022,18 +1057,33 @@ class CompiledKernel:
     bit-exact equal to the synchronous output."""
 
     def __init__(self, fn: Callable, engine: str = "auto", sew: int = 8,
-                 runtime: Optional[NmcRuntime] = None):
-        assert engine == "auto" or engine in ENGINES, engine
+                 runtime: Optional[NmcRuntime] = None, tiles: int = 1,
+                 partition: str = "auto"):
+        # kwargs validate eagerly: a typo'd engine string or an impossible
+        # tile count must fail at decoration time with a named cause, not
+        # as a deep-stack assertion at first call
+        _check_engine(engine)
+        if sew not in alu.SEWS:
+            raise ValueError(
+                f"unsupported sew {sew!r}: expected one of "
+                f"{tuple(sorted(alu.SEWS))}")
+        tiles = _check_tiles(tiles)
+        if partition not in PARTITIONS:
+            raise ValueError(
+                f"unknown partition strategy {partition!r}: expected one "
+                f"of {PARTITIONS}")
         self.fn = fn
         self.engine = engine
         self.sew = sew
+        self.tiles = tiles
+        self.partition = partition
         self._runtime = runtime
         self.__name__ = getattr(fn, "__name__", "kernel")
         self.__doc__ = getattr(fn, "__doc__", None)
 
     def __repr__(self):
         return (f"CompiledKernel({self.__name__}, engine={self.engine!r}, "
-                f"sew={self.sew})")
+                f"sew={self.sew}, tiles={self.tiles})")
 
     @property
     def runtime(self) -> NmcRuntime:
@@ -1055,7 +1105,7 @@ class CompiledKernel:
     def lower(self, *args, engine: Optional[str] = None,
               sew: Optional[int] = None) -> LoweredKernel:
         builder = self.trace(*args, sew=sew)
-        eng = engine or self.engine
+        eng = _check_engine(engine) if engine is not None else self.engine
         if eng == "auto":
             eng = select_engine(builder)
         return _LOWERINGS[eng](builder).lower()
@@ -1064,39 +1114,93 @@ class CompiledKernel:
         """Pure-numpy reference output (the traced ``alu.*_np`` values)."""
         return self.trace(*args, sew=sew).oracle()
 
-    # -- execution -----------------------------------------------------------
-    def __call__(self, *args, engine: Optional[str] = None) -> np.ndarray:
-        """Synchronous call: submit and resolve immediately.  Shares the
-        async path's tile and jit cache, so sync and async are bit-exact
-        by construction and device state stays bounded (one resident
-        buffer per runtime, re-installed per call)."""
-        return self.call_async(*args, engine=engine).result()
+    # -- partitioning (DESIGN.md §9) -----------------------------------------
+    def plan_partition(self, *args, tiles: Optional[int] = None,
+                       sew: Optional[int] = None):
+        """Trace the kernel and shard its tape across the tile array via
+        :func:`repro.nmc.partition.plan` (the planner layer)."""
+        from repro.nmc import partition as P
+        n = self.tiles if tiles is None else _check_tiles(tiles)
+        return P.plan(self.trace(*args, sew=sew), n, self.partition)
 
-    def call_async(self, *args, engine: Optional[str] = None):
+    def lower_wave(self, *args, engine: Optional[str] = None,
+                   tiles: Optional[int] = None):
+        """Lower a partitioned wave: returns ``(plan, lowered_shards)``
+        with every shard program NOP-padded to the wave's common
+        instruction bucket, so the whole wave lands in **one** bucketed
+        group — one XLA compile, one batched dispatch across the tiles."""
+        pplan = self.plan_partition(*args, tiles=tiles)
+        eng = _check_engine(engine) if engine is not None else self.engine
+        if eng == "auto":
+            # select on the first (largest) shard: partitioning can only
+            # relax engine constraints (smaller vectors, same ops), so the
+            # head shard's choice holds for the whole wave
+            eng = select_engine(pplan.builders[0])
+        lks = [_LOWERINGS[eng](sb).lower() for sb in pplan.builders]
+        bucket = instr_bucket(max(lk.program.n_instr for lk in lks))
+        for lk in lks:
+            lk.pad_to(bucket)
+        return pplan, lks
+
+    # -- execution -----------------------------------------------------------
+    def __call__(self, *args, engine: Optional[str] = None,
+                 tiles: Optional[int] = None) -> np.ndarray:
+        """Synchronous call: submit and resolve immediately.  Shares the
+        async path's tiles and jit cache, so sync and async are bit-exact
+        by construction and device state stays bounded (one resident
+        buffer per runtime tile, re-installed per call)."""
+        return self.call_async(*args, engine=engine, tiles=tiles).result()
+
+    def call_async(self, *args, engine: Optional[str] = None,
+                   tiles: Optional[int] = None):
         """Submit through the runtime's DispatchQueue; returns the future
         immediately (double-buffered staging, batched launch waves).
-        All kernel calls share the runtime's ``jit_tile`` — per-tile FIFO
-        order keeps any number of in-flight futures correct while the
-        resident state stays one buffer."""
-        lk = self.lower(*args, engine=engine)
+
+        With ``tiles=1`` the kernel runs whole on the runtime's shared
+        head tile and the result is an :class:`repro.nmc.runtime.NMCFuture`.
+        With ``tiles=N > 1`` the partitioning planner shards the traced
+        tape across the runtime's tile set (``jit_tiles``): every shard
+        submits to its own tile — the queue batches them into one launch
+        wave and, since the shard programs are pre-padded to one common
+        instruction bucket, one XLA compile covers the whole wave — and
+        the result is a :class:`repro.nmc.runtime.GatherFuture` whose
+        ``result()`` reassembles the caller's array (bit-exact vs the
+        single-tile path by construction).  Per-tile FIFO order keeps any
+        number of in-flight futures correct either way."""
+        n = self.tiles if tiles is None else _check_tiles(tiles)
         rt = self.runtime
-        return rt.queue.submit(rt.jit_tile, lk.program, image=lk.mem,
-                               out_slice=lk.out_slice, post=lk.post)
+        if n == 1:
+            lk = self.lower(*args, engine=engine)
+            return rt.queue.submit(rt.jit_tile, lk.program, image=lk.mem,
+                                   out_slice=lk.out_slice, post=lk.post)
+        from repro.nmc.runtime import GatherFuture
+        pplan, lks = self.lower_wave(*args, engine=engine, tiles=n)
+        futs = [rt.queue.submit(tile, lk.program, image=lk.mem,
+                                out_slice=lk.out_slice, post=lk.post)
+                for tile, lk in zip(rt.jit_tiles(len(lks)), lks)]
+        return GatherFuture(futs, pplan.gather)
 
 
 def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
-        runtime: Optional[NmcRuntime] = None):
+        runtime: Optional[NmcRuntime] = None, tiles: int = 1,
+        partition: str = "auto"):
     """Compile a traced kernel function into a :class:`CompiledKernel`.
 
     ``engine`` is ``"auto"`` (NM-Caesar when bus-expressible, NM-Carus
     otherwise), ``"caesar"`` or ``"carus"`` — an explicit engine that
     cannot express the body raises :class:`UnsupportedOnEngine` naming the
-    op.  ``sew`` is the element width (8/16/32).  Usable as a decorator
-    (``@nmc.jit`` / ``@nmc.jit(engine="carus")``) or a call."""
+    op.  ``sew`` is the element width (8/16/32).  ``tiles`` shards every
+    call across that many tiles through the partitioning planner
+    (DESIGN.md §9) — ``partition`` picks the split strategy (``"auto"``,
+    ``"rows"``, ``"axis"``).  All kwargs validate eagerly with
+    ``ValueError``.  Usable as a decorator (``@nmc.jit`` /
+    ``@nmc.jit(engine="carus", tiles=4)``) or a call."""
     if fn is None:
         return lambda f: CompiledKernel(f, engine=engine, sew=sew,
-                                        runtime=runtime)
-    return CompiledKernel(fn, engine=engine, sew=sew, runtime=runtime)
+                                        runtime=runtime, tiles=tiles,
+                                        partition=partition)
+    return CompiledKernel(fn, engine=engine, sew=sew, runtime=runtime,
+                          tiles=tiles, partition=partition)
 
 
 def kernel(fn: Optional[Callable] = None, **options):

@@ -249,6 +249,10 @@ class ResidentPool:
         engine = get_engine(self._engine[tile])
         elems = engine.extract(self._state[tile], out_slice, sew)
         self.stores += 1
+        # word-granular accounting: ``out_slice`` is (word_start, n_words),
+        # and the 32-bit system bus moves whole words — a sub-word element
+        # tail at SEW 8/16 (common for gathered shard outputs) still costs
+        # its full last word.  Locked by tests/test_runtime.py.
         self.bytes_moved += int(out_slice[1]) * WORD_BYTES
         return elems
 

@@ -76,6 +76,10 @@ class NmcRuntime:
     * ``queue``    — the double-buffered dispatch queue all kernel calls
       submit to (sync calls resolve their future immediately; async ones
       return it) — bit-exact either way (tests/test_frontend.py).
+
+    Kernel calls dispatch on the runtime's tile set (:meth:`jit_tiles`):
+    unpartitioned calls on the head tile, partitioned waves (``tiles=N``)
+    one shard per tile.
     """
 
     def __init__(self, mode: str = "overlapped"):
@@ -86,12 +90,35 @@ class NmcRuntime:
         self.resident = ResidentPool(pool=self.bucketed)
         self.queue = DispatchQueue(pool=self.resident, mode=mode)
 
-    #: The tile compiled kernels dispatch on.  One shared tile keeps the
-    #: resident device state bounded (one buffer, re-installed per call)
-    #: instead of leaking a tile memory per kernel invocation; per-tile
-    #: FIFO order makes arbitrarily many in-flight futures safe — each
-    #: captures its own wave's final state.
-    jit_tile = ("jit", "shared")
+    @classmethod
+    def for_queue(cls, queue) -> "NmcRuntime":
+        """Wrap an existing :class:`repro.nmc.runtime.DispatchQueue` (and
+        the pools under it) as a runtime, so compiled kernels can join a
+        caller-owned dispatch discipline instead of the process default —
+        e.g. a :class:`repro.serve.engine.ServeEngine` given a private
+        queue routes its tile-array projections through the same queue it
+        uses for prefill/decode work."""
+        rt = cls.__new__(cls)
+        rt.bucketed = queue.pool.pool
+        rt.resident = queue.pool
+        rt.queue = queue
+        return rt
+
+    def jit_tiles(self, n: int) -> tuple:
+        """The runtime's shared tile *set*: partitioned kernel waves
+        dispatch shard ``k`` on tile ``("jit", k)``.  A fixed, reused id
+        space keeps the resident device state bounded (one buffer per
+        array position, re-installed per call) instead of leaking a tile
+        memory per kernel invocation; per-tile FIFO order makes
+        arbitrarily many in-flight futures safe — each captures its own
+        wave's final state."""
+        return tuple(("jit", k) for k in range(int(n)))
+
+    #: The head of the tile set: where unpartitioned (``tiles=1``) kernel
+    #: calls dispatch.
+    @property
+    def jit_tile(self):
+        return self.jit_tiles(1)[0]
 
 
 _DEFAULT: Optional[NmcRuntime] = None

@@ -122,6 +122,39 @@ class NMCFuture:
         return self._out
 
 
+class GatherFuture:
+    """Future over a partitioned kernel wave (DESIGN.md §9): one
+    :class:`NMCFuture` per tile shard plus the partition plan's ``gather``
+    closure.  ``result()`` resolves every shard (the first resolution
+    flushes the queue, launching the whole wave batched) and reassembles
+    the caller's array — bit-exact vs the single-tile path by
+    construction (tests/test_partition.py)."""
+
+    def __init__(self, futures, gather: Callable):
+        self.futures = list(futures)
+        self._gather = gather
+        self._out = None
+        self._resolved = False
+
+    @property
+    def launched(self) -> bool:
+        return all(f.launched for f in self.futures)
+
+    @property
+    def done(self) -> bool:
+        return all(f.done for f in self.futures)
+
+    @property
+    def resolved(self) -> bool:
+        return self._resolved
+
+    def result(self) -> np.ndarray:
+        if not self._resolved:
+            self._out = self._gather([f.result() for f in self.futures])
+            self._resolved = True
+        return self._out
+
+
 class DeviceFuture:
     """Future over an already-launched JAX computation (async dispatch):
     ``result()`` blocks until the value pytree is ready."""
@@ -296,5 +329,7 @@ class DispatchQueue:
 
     # -- accounting ----------------------------------------------------------
     def _account_store(self, out_slice: tuple[int, int]) -> None:
+        # mirrors ResidentPool.store: word-granular (n_words * 4), so
+        # sub-word element tails at SEW 8/16 cost their whole last word
         self.pool.stores += 1
         self.pool.bytes_moved += int(out_slice[1]) * WORD_BYTES

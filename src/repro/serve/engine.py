@@ -19,6 +19,11 @@ batch of admissions issues all its prefills before the first host-side
 cache merge (DESIGN.md §5.2).  By default the engine joins the shared
 :func:`repro.nmc.default_runtime` queue, so serving traffic and
 ``nmc.jit`` kernel calls drain through one dispatch discipline.
+
+W8A8 projections offloaded to the simulated tile array
+(:meth:`ServeEngine.nmc_project`) shard across ``nmc_tiles`` tiles via
+the partitioning planner (DESIGN.md §9) — the same planner, queue and
+bucketed jit cache every ``nmc.jit(tiles=N)`` kernel uses.
 """
 
 from __future__ import annotations
@@ -67,13 +72,24 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
-                 nmc_queue: Optional[DispatchQueue] = None):
+                 nmc_queue: Optional[DispatchQueue] = None,
+                 nmc_tiles: int = 1):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.nmc_queue = nmc_queue if nmc_queue is not None \
             else nmc.default_runtime().queue
+        # W8A8 projections offloaded to the NMC tile array shard across
+        # this many tiles via the partitioning planner (DESIGN.md §9);
+        # they dispatch through THIS engine's queue (for_queue wraps a
+        # caller-owned queue as a kernel runtime), so serving traffic and
+        # projection waves share one dispatch discipline and jit cache
+        self.nmc_tiles = int(nmc_tiles)
+        if self.nmc_tiles < 1:
+            raise ValueError(f"nmc_tiles must be >= 1, got {nmc_tiles!r}")
+        self._nmc_rt = nmc.NmcRuntime.for_queue(self.nmc_queue)
+        self._nmc_proj: dict = {}       # (m, k) -> CompiledKernel
         self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
         self.prefill = jax.jit(make_prefill_step(cfg, max_len))
         self.caches = lm.init_caches(params, cfg, n_slots, max_len,
@@ -84,6 +100,43 @@ class ServeEngine:
         self.slot_last_tok = np.zeros(n_slots, np.int32)
         self.queue: list[Request] = []
         self.done: list[Request] = []
+
+    # -- NMC tile-array offload ----------------------------------------------
+    def nmc_project(self, x8, w8) -> np.ndarray:
+        """One W8A8 projection ``y = x8 @ w8`` executed on the NMC tile
+        array, sharded across ``nmc_tiles`` tiles by the partitioning
+        planner (DESIGN.md §9): activation entries are scalar taps, weight
+        rows are resident vectors, output rows distribute across the array
+        and the gather reassembles ``(m, n)`` — bit-exact int8 wrap-at-8
+        semantics (two's complement), matching the quantized kernels the
+        Table V matmul models.
+
+        This is the serving-level hook onto the paper's hardware path: the
+        jitted bf16/int8 JAX decode loop stands in for the host CPU, and
+        projections routed here run on the simulated tile array through
+        the same planner and bucketed jit cache as ``nmc.jit`` kernels —
+        submitted to *this engine's* dispatch queue (``nmc_queue``), so
+        prefill/decode work and projection waves drain through one
+        discipline.  Demo-scale by design — one projection per call,
+        shapes bounded by a tile's SRAM macro."""
+        x8 = np.asarray(x8, np.int8)
+        w8 = np.asarray(w8, np.int8)
+        m, k = x8.shape
+        assert w8.shape[0] == k, (x8.shape, w8.shape)
+        kern = self._nmc_proj.get((m, k))
+        if kern is None:
+            def proj(t, X, W):
+                a = t.consts(X)
+                rows = [t.load(W[r]) for r in range(k)]
+                for i in range(m):
+                    acc = None
+                    for kk in range(k):
+                        acc = nmc.mac(acc, a[i, kk], rows[kk])
+                    t.store(acc)
+            kern = nmc.jit(proj, sew=8, tiles=self.nmc_tiles,
+                           runtime=self._nmc_rt)
+            self._nmc_proj[(m, k)] = kern
+        return np.asarray(kern(x8, w8)).reshape(m, w8.shape[1])
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):

@@ -289,6 +289,41 @@ def test_lowering_error_on_public_surface():
     assert "LoweringError" in nmc.__all__
 
 
+def test_jit_kwargs_validate_eagerly():
+    """A typo'd engine string, an unsupported sew, an impossible tile
+    count or an unknown partition strategy must raise a named ValueError
+    at decoration time — not a deep-stack assertion at first call."""
+    def body(t, x):
+        t.store(t.load(x) + 1)
+
+    with pytest.raises(ValueError, match="engine 'ceasar'"):
+        nmc.jit(body, engine="ceasar")
+    with pytest.raises(ValueError, match="sew 12"):
+        nmc.jit(body, sew=12)
+    with pytest.raises(ValueError, match="sew"):
+        nmc.jit(body, sew="8x")
+    with pytest.raises(ValueError, match="tiles"):
+        nmc.jit(body, tiles=0)
+    with pytest.raises(ValueError, match="tiles"):
+        nmc.jit(body, tiles="many")
+    with pytest.raises(ValueError, match="partition"):
+        nmc.jit(body, partition="diagonal")
+    # per-call overrides validate identically (no deep-stack KeyError /
+    # bare int() failure)
+    k = nmc.jit(body, runtime=_RT)
+    with pytest.raises(ValueError, match="tiles"):
+        k.call_async(np.zeros(8, np.int8), tiles=-2)
+    with pytest.raises(ValueError, match="tiles must be an int"):
+        k.call_async(np.zeros(8, np.int8), tiles="many")
+    with pytest.raises(ValueError, match="engine 'ceasar'"):
+        k(np.zeros(8, np.int8), engine="ceasar")
+    with pytest.raises(ValueError, match="engine 'ceasar'"):
+        k(np.zeros(8, np.int8), engine="ceasar", tiles=2)
+    # valid kwargs still construct
+    assert nmc.jit(body, engine="carus", sew=16, tiles=4,
+                   partition="axis").tiles == 4
+
+
 def test_mac_rejects_scalar_accumulator():
     """Regression: a non-traced accumulator used to be silently dropped
     (mac(5, a, b) computed a*b); it must raise instead."""

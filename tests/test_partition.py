@@ -1,0 +1,307 @@
+"""Tile-parallel partitioning planner (DESIGN.md §9).
+
+Two layers of coverage:
+
+* **Planner properties** (hypothesis, or the deterministic vendored shim
+  offline; no JAX, pure tape/oracle level): random lengths × split
+  factors round-trip — shard oracles gather back to the unsharded
+  oracle bit-exactly, ragged tails land on the last shard, slide halos
+  reproduce conv's column overlap, row splits reassemble store blocks.
+* **Executed waves** (the engines, via one shared runtime/jit cache):
+  partitioned sync and async calls are bit-exact vs the single-tile
+  path on both engines, shard programs pre-pad into one instruction
+  bucket per wave, and repeated partitioned calls hit the compile cache.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import nmc
+from repro.core import alu
+from repro.nmc import partition as P
+
+SEWS = (8, 16, 32)
+RNG = np.random.default_rng(7)
+
+# one shared runtime for the module: every executed wave shares a jit cache
+_RT = nmc.NmcRuntime()
+
+
+def _rand(shape, sew, rng=RNG):
+    info = np.iinfo(alu.NP_DTYPES[sew])
+    return rng.integers(info.min, info.max + 1, shape,
+                        dtype=alu.NP_DTYPES[sew])
+
+
+def _trace(kfn, args, sew):
+    return nmc.jit(kfn, sew=sew).trace(*args)
+
+
+# ---------------------------------------------------------------------------
+# Planner properties (tape/oracle level — no engine execution)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 600), st.integers(1, 9), st.sampled_from(SEWS),
+       st.integers(0, 2 ** 31))
+def test_axis_split_round_trips_random_lengths(n, tiles, sew, seed):
+    """Random lengths x split factors: the gathered shard oracles equal
+    the unsharded oracle bit-exactly, every shard but the last covers a
+    whole number of words, and the ragged tail lands on the last tile."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(n, sew, rng), _rand(n, sew, rng)
+
+    def kfn(t, x, y):
+        t.store((t.load(x, bank=0) * 3 + t.load(y)).max(0))
+
+    b = _trace(kfn, (x, y), sew)
+    pl = P.plan(b, tiles)
+    assert 1 <= pl.n_shards <= tiles
+    assert (pl.oracle() == b.oracle()).all()
+    lanes = 32 // sew
+    sizes = [hi - lo for (_, lo, hi) in
+             (pc for shard in pl.pieces for pc in shard)]
+    assert sum(sizes) == n
+    if pl.n_shards > 1:
+        head = set(sizes[:-1])
+        assert len(head) == 1                  # equal word-aligned chunks
+        assert next(iter(head)) % lanes == 0
+        assert sizes[-1] <= next(iter(head))   # ragged tail on last tile
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 200), st.integers(2, 8), st.integers(1, 5),
+       st.integers(0, 2 ** 31))
+def test_axis_split_slide_halo_round_trips(n, tiles, amount, seed):
+    """Slides read ahead across chunk boundaries: the halo must hand each
+    shard its true neighbours, zero-filling only at the real tail."""
+    rng = np.random.default_rng(seed)
+    x = _rand(n, 8, rng)
+
+    def kfn(t, x):
+        v = t.load(x)
+        t.store(nmc.mac(v.slide_down(amount), 2, v))
+
+    b = _trace(kfn, (x,), 8)
+    pl = P.plan(b, tiles)
+    assert pl.strategy == "axis"               # slides route to axis
+    assert (pl.oracle() == b.oracle()).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 8), st.integers(8, 64),
+       st.integers(0, 2 ** 31))
+def test_rows_split_round_trips_random_store_counts(m, tiles, p, seed):
+    """Store-level (matmul-row) splits: shard oracles reassemble into the
+    unsharded stacked output for any store count x split factor."""
+    rng = np.random.default_rng(seed)
+    A, B = _rand((m, 4), 8, rng), _rand((4, p), 8, rng)
+
+    def kfn(t, A, B):
+        a = t.consts(A)
+        rows = [t.load(B[r]) for r in range(4)]
+        for i in range(m):
+            acc = None
+            for kk in range(4):
+                acc = nmc.mac(acc, a[i, kk], rows[kk])
+            t.store(acc)
+
+    b = _trace(kfn, (A, B), 8)
+    pl = P.plan(b, tiles, partition="rows")
+    assert pl.n_shards == min(tiles, m)
+    assert (pl.oracle() == b.oracle()).all()
+    # balanced contiguous blocks: shard sizes differ by at most one store
+    counts = [len(pc) for pc in pl.pieces]
+    assert max(counts) - min(counts) <= 1
+
+
+def test_auto_strategy_rules():
+    """auto: rows when stores distribute evenly and there are no slides;
+    slides (conv's shifted replicas) and single stores route to axis."""
+    x = _rand(64, 8)
+    A, B = _rand((8, 4), 8), _rand((4, 64), 8)
+
+    def mm(t, A, B):
+        a = t.consts(A)
+        rows = [t.load(B[r]) for r in range(4)]
+        for i in range(8):
+            acc = None
+            for kk in range(4):
+                acc = nmc.mac(acc, a[i, kk], rows[kk])
+            t.store(acc)
+
+    def ew(t, x):
+        t.store(t.load(x) + 1)
+
+    def slid(t, x):
+        v = t.load(x)
+        t.store(nmc.mac(v.slide_down(1), 1, v))
+
+    assert P.plan(_trace(mm, (A, B), 8), 4).strategy == "rows"
+    assert P.plan(_trace(mm, (A, B), 8), 3).strategy == "axis"  # 8 % 3 != 0
+    assert P.plan(_trace(ew, (x,), 8), 4).strategy == "axis"
+    assert P.plan(_trace(slid, (x,), 8), 4).strategy == "axis"
+    assert P.plan(_trace(ew, (x,), 8), 1).strategy == "single"
+
+
+def test_partition_errors_are_informative():
+    x, y = _rand(16, 8), _rand(32, 8)
+
+    def two_axes(t, x, y):                 # dead load of a different length
+        t.load(y)
+        t.store(t.load(x) + 1)
+
+    b = _trace(two_axes, (x, y), 8)
+    with pytest.raises(P.PartitionError, match="element axis"):
+        P.plan(b, 4, partition="axis")
+    with pytest.raises(P.PartitionError, match="stores"):
+        P.plan(b, 4, partition="rows")     # single store
+    with pytest.raises(P.PartitionError, match="no applicable"):
+        P.plan(b, 4)
+    with pytest.raises(ValueError, match="tiles"):
+        P.plan(b, 0)
+    with pytest.raises(ValueError, match="partition"):
+        P.plan(b, 2, partition="diagonal")
+
+
+def test_conv_column_split_matches_unsharded_oracle():
+    """The Table V conv shape: output columns split across tiles with an
+    f-1 halo; every shard's oracle window matches the unsharded conv."""
+    A, F = _rand((8, 96), 8), _rand((3, 3), 8)
+
+    def conv(t, A, F):
+        fw = t.consts(F)
+        av = [t.load(A[r]) for r in range(8)]
+        sh = {(dj, r): av[r].slide_down(dj)
+              for dj in range(1, 3) for r in range(8)}
+        for i in range(6):
+            acc = None
+            for di in range(3):
+                for dj in range(3):
+                    src = av[i + di] if dj == 0 else sh[(dj, i + di)]
+                    acc = nmc.mac(acc, fw[di, dj], src)
+            t.store(acc, n=94)
+
+    b = _trace(conv, (A, F), 8)
+    for tiles in (2, 4, 8):
+        pl = P.plan(b, tiles)
+        assert pl.strategy == "axis"
+        assert (pl.oracle() == b.oracle()).all(), tiles
+
+
+# ---------------------------------------------------------------------------
+# Executed waves: engines + queue + gather, shared jit cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["caesar", "carus"])
+def test_partitioned_execution_bit_exact_vs_single_tile(engine):
+    x, y = _rand(96, 8), _rand(96, 8)
+
+    @nmc.jit(runtime=_RT)
+    def k(t, x, y):
+        t.store((t.load(x, bank=0) ^ t.load(y)).max(1))
+
+    base = np.asarray(k(x, y, engine=engine))
+    assert (base == k.oracle(x, y)).all()
+    for tiles in (2, 4):
+        sync = np.asarray(k(x, y, engine=engine, tiles=tiles))
+        fut = k.call_async(x, y, engine=engine, tiles=tiles)
+        assert isinstance(fut, nmc.GatherFuture)
+        assert len(fut.futures) == tiles
+        asyn = np.asarray(fut.result())
+        assert (sync == base).all() and (asyn == base).all(), tiles
+        assert fut.resolved and fut.done
+
+
+@pytest.mark.parametrize("engine", ["caesar", "carus"])
+def test_partitioned_matmul_rows_bit_exact(engine):
+    A, B = _rand((8, 4), 8), _rand((4, 48), 8)
+
+    @nmc.jit(runtime=_RT, tiles=4)
+    def mm(t, A, B):
+        a = t.consts(A)
+        rows = [t.load(B[r]) for r in range(4)]
+        for i in range(8):
+            acc = None
+            for kk in range(4):
+                acc = nmc.mac(acc, a[i, kk], rows[kk])
+            t.store(acc)
+
+    base = np.asarray(mm(A, B, engine=engine, tiles=1))
+    got = np.asarray(mm(A, B, engine=engine))        # decorator tiles=4
+    assert got.shape == base.shape == (8, 48)
+    assert (got == base).all()
+    exp = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int8)
+    assert (base == exp).all()
+
+
+def test_wave_shards_share_one_instruction_bucket_and_compile():
+    """lower_wave pre-pads every shard to the wave's common bucket, so a
+    partitioned wave is one bucketed group: one compile, and repeated
+    calls add none."""
+    x, y = _rand(120, 8), _rand(120, 8)
+
+    @nmc.jit(runtime=_RT)
+    def k(t, x, y):
+        t.store(t.load(x, bank=0) + t.load(y))
+
+    pplan, lks = k.lower_wave(x, y, engine="caesar", tiles=4)
+    keys = {lk.program.bucket_key for lk in lks}
+    assert len(keys) == 1 and pplan.n_shards == 4
+    n0 = {lk.program.n_instr for lk in lks}
+    assert len(n0) == 1                    # NOP-padded to one shape
+    k(x, y, engine="caesar", tiles=4)      # warm the bucket
+    before = _RT.bucketed.compiles
+    k(x, y, engine="caesar", tiles=4)
+    fut = k.call_async(x, y, engine="caesar", tiles=4)
+    fut.result()
+    assert _RT.bucketed.compiles == before  # cache hits only
+
+
+def test_partitioned_calls_keep_resident_state_bounded():
+    """Shard k of every partitioned call reuses tile ("jit", k): N calls
+    at tiles=T must leave at most T resident tile buffers, not N*T."""
+    rt = nmc.NmcRuntime()
+    x = _rand(64, 8)
+
+    @nmc.jit(runtime=rt)
+    def k(t, x):
+        t.store(t.load(x) + 1)
+
+    for _ in range(3):
+        k(x, tiles=2)
+    assert len(rt.resident.tiles) == 2
+    assert rt.jit_tiles(2) == (("jit", 0), ("jit", 1))
+    assert rt.jit_tile == ("jit", 0)
+
+
+def test_conv_partitioned_executes_on_caesar():
+    """Column-split conv with slide replicas, executed: gathers back to
+    the exact single-tile output (halo correctness on the real engine)."""
+    A, F = _rand((4, 64), 8), _rand((3, 3), 8)
+
+    @nmc.jit(runtime=_RT)
+    def conv(t, A, F):
+        fw = t.consts(F)
+        av = [t.load(A[r]) for r in range(4)]
+        sh = {(dj, r): av[r].slide_down(dj)
+              for dj in range(1, 3) for r in range(4)}
+        for i in range(2):
+            acc = None
+            for di in range(3):
+                for dj in range(3):
+                    src = av[i + di] if dj == 0 else sh[(dj, i + di)]
+                    acc = nmc.mac(acc, fw[di, dj], src)
+            t.store(acc, n=62)
+
+    base = np.asarray(conv(A, F, engine="caesar"))
+    got = np.asarray(conv(A, F, engine="caesar", tiles=4))
+    assert (got == base).all()
+
+
+def test_partition_plan_public_surface():
+    assert nmc.plan_partition is P.plan
+    for name in ("PartitionPlan", "PartitionError", "GatherFuture",
+                 "plan_partition"):
+        assert name in nmc.__all__

@@ -56,6 +56,42 @@ def test_nmc_quantized_serving_runs():
     assert len(done) == 1 and len(done[0].out) == 4
 
 
+def test_w8a8_projection_shards_across_tile_array():
+    """ServeEngine.nmc_project runs a W8A8 projection on the simulated
+    NMC tile array, sharded across nmc_tiles by the partitioning planner
+    (DESIGN.md §9) — bit-exact int8 wrap semantics, identical across tile
+    counts, riding the shared nmc runtime's jit cache."""
+    from repro import nmc
+    cfg = cb.get("qwen1.5-0.5b", smoke=True).scaled(nmc_mode="w8a8")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, cfg)
+    rng = np.random.default_rng(3)
+    x8 = rng.integers(-128, 128, (4, 4), dtype=np.int8)
+    w8 = rng.integers(-128, 128, (4, 24), dtype=np.int8)
+    oracle = (x8.astype(np.int64) @ w8.astype(np.int64)).astype(np.int8)
+    eng1 = ServeEngine(cfg, qparams, n_slots=1, max_len=32)
+    eng4 = ServeEngine(cfg, qparams, n_slots=1, max_len=32, nmc_tiles=4)
+    assert eng1.nmc_tiles == 1 and eng4.nmc_tiles == 4
+    y1 = eng1.nmc_project(x8, w8)
+    y4 = eng4.nmc_project(x8, w8)
+    assert y1.shape == y4.shape == (4, 24)
+    assert (y1 == oracle).all() and (y4 == oracle).all()
+    # the projection kernels dispatch through the shared default runtime
+    # (one jit cache for serving offloads and nmc.jit kernel calls)
+    assert nmc.default_runtime().queue.submitted > 0
+    # an engine given a PRIVATE queue routes projection waves through it,
+    # not the global default (regression: nmc_project used to ignore
+    # nmc_queue entirely)
+    own = nmc.DispatchQueue(pool=nmc.ResidentPool(
+        pool=nmc.default_runtime().bucketed))   # share the jit cache only
+    engq = ServeEngine(cfg, qparams, n_slots=1, max_len=32,
+                       nmc_queue=own, nmc_tiles=2)
+    yq = engq.nmc_project(x8, w8)
+    assert (yq == oracle).all()
+    assert own.submitted == 2                   # the 2-shard wave
+    assert len(own.pool.tiles) == 2             # resident on the own pool
+
+
 def test_cache_donation_shapes_stable():
     cfg = cb.get("qwen1.5-0.5b", smoke=True)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
