@@ -17,7 +17,11 @@ tracer evaluates alongside.  This demo:
 4. shards ONE kernel across the tile array (`tiles=N`): the partitioning
    planner splits the matmul's output rows over 4 tiles, the wave runs as
    one batched dispatch, a future-of-gathers reassembles the result
-   bit-exactly, and the shared-bus timing model reports the wave speedup.
+   bit-exactly, and the shared-bus timing model reports the wave speedup;
+5. swaps the engine executor under the same kernel (`backend="pallas"`):
+   the bucketed instruction stream runs as one fused `pl.pallas_call`
+   instead of a per-instruction `lax.scan`, bit-exact and timed against
+   the scan reference (DESIGN.md §10).
 
 Run:  PYTHONPATH=src python examples/quickstart.py   (finishes in ~30 s)
 """
@@ -136,6 +140,40 @@ def main():
           f"{rt.resident.dispatches} dispatches, "
           f"{rt.queue.submitted} queued kernel calls (sync + async + "
           f"partitioned waves share the dispatch queue)")
+
+    print()
+    print("=" * 64)
+    print("5. Pallas fast-path backend (backend='pallas', DESIGN.md §10)")
+    print("=" * 64)
+    # same kernel, same runtime, different executor: the whole bucketed
+    # instruction stream fuses into one pl.pallas_call (interpret mode on
+    # CPU, native kernels on TPU/GPU; backend='auto' picks per device)
+    import time
+
+    ref = np.asarray(matmul8(A, B, backend="scan"))
+    fast = np.asarray(matmul8(A, B, backend="pallas"))
+    assert (fast == ref).all(), "pallas backend diverged from scan"
+
+    def best_of(fn, n=3):
+        t = [None] * n
+        for i in range(n):
+            t0 = time.perf_counter()
+            fn()
+            t[i] = time.perf_counter() - t0
+        return min(t) * 1e6
+
+    lk = matmul8.lower(A, B)
+    tile = rt.jit_tile
+    us = {bk: best_of(lambda bk=bk: rt.queue.submit(
+              tile, lk.program, image=lk.mem, out_slice=lk.out_slice,
+              post=lk.post, backend=bk).result())
+          for bk in nmc.BACKENDS}
+    dev = "CPU interpret mode" if nmc.resolve_backend("auto") == "scan" \
+        else "native kernels"
+    print(f"  matmul8 bit-exact scan == pallas: True")
+    print(f"  dispatch: scan {us['scan']:8.0f} us   pallas "
+          f"{us['pallas']:8.0f} us   ({us['scan'] / us['pallas']:.1f}x, "
+          f"{dev})")
 
 
 if __name__ == "__main__":

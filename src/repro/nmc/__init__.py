@@ -26,8 +26,11 @@ Layers (each usable directly for expert control):
   :class:`Program` IR covering NM-Caesar bus-op streams and NM-Carus
   xvnmc issue traces, plus the padding NOP and bucket rules.
 * :mod:`repro.nmc.engine` — the :class:`Engine` protocol (lower / run /
-  extract / cost) and the two tile adapters over the functional
-  simulators.
+  extract / cost), the two scan-backend tile adapters over the functional
+  simulators, and the backend registry (``get_engine(name, backend)``).
+* :mod:`repro.nmc.pallas_engine` — the fused-kernel fast path
+  (DESIGN.md §10): ``backend="pallas"`` lowers whole bucketed waves to one
+  ``pl.pallas_call`` (interpret-mode on CPU), bit-exact vs scan.
 * :mod:`repro.nmc.pool` — the vmapped executors: exact-shape
   :class:`TilePool`, shape-bucketed :class:`BucketedPool` (one XLA
   compile per ``(engine, sew, instr-bucket, tile-bucket)``) and the
@@ -43,7 +46,8 @@ Layers (each usable directly for expert control):
 
 from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
                                instr_bucket, nop_entry, stack_programs)
-from repro.nmc.engine import CaesarTile, CarusTile, Engine, get_engine
+from repro.nmc.engine import (BACKENDS, CaesarTile, CarusTile, Engine,
+                              get_engine, implementations, resolve_backend)
 from repro.nmc.pool import BucketedPool, ResidentPool, TilePool, tile_bucket
 from repro.nmc.runtime import (DeviceFuture, DispatchQueue, GatherFuture,
                                NMCFuture)
@@ -68,8 +72,9 @@ __all__ = [
     # unified program IR
     "PROG_DTYPE", "Program", "caesar_entry", "carus_entry", "nop_entry",
     "instr_bucket", "stack_programs",
-    # engines
-    "CaesarTile", "CarusTile", "Engine", "get_engine",
+    # engines / backends
+    "CaesarTile", "CarusTile", "Engine", "get_engine", "BACKENDS",
+    "implementations", "resolve_backend",
     # pools / scheduler
     "TilePool", "BucketedPool", "ResidentPool", "tile_bucket",
     # async dispatch runtime

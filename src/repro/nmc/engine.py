@@ -107,16 +107,51 @@ class CarusTile(_EngineBase):
         return run_one
 
 
-_DEFAULT_ENGINES: dict[str, Engine] = {}
+#: Execution backends implementing the Engine protocol.  "scan" is the
+#: ``lax.scan`` reference interpreter; "pallas" is the fused-kernel fast
+#: path (``repro.nmc.pallas_engine``), auto-falling back to interpret
+#: mode on CPU.
+BACKENDS = ("scan", "pallas")
+
+_DEFAULT_ENGINES: dict[tuple[str, str], Engine] = {}
 
 
-def get_engine(name: str) -> Engine:
-    """Default (paper-configuration) engine instances, shared per process."""
-    if name not in _DEFAULT_ENGINES:
-        if name == "caesar":
-            _DEFAULT_ENGINES[name] = CaesarTile()
-        elif name == "carus":
-            _DEFAULT_ENGINES[name] = CarusTile()
-        else:
+def resolve_backend(backend: str) -> str:
+    """Map ``"auto"`` to the fast path on accelerators, scan elsewhere."""
+    if backend == "auto":
+        import jax
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") \
+            else "scan"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}: valid backends are "
+            f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+def get_engine(name: str, backend: str = "scan") -> Engine:
+    """Default (paper-configuration) engine instances, shared per process.
+
+    ``backend`` selects the implementation: ``"scan"`` (reference
+    interpreters), ``"pallas"`` (fused kernels), or ``"auto"``.
+    """
+    backend = resolve_backend(backend)
+    key = (name, backend)
+    if key not in _DEFAULT_ENGINES:
+        if name not in ("caesar", "carus"):
             raise KeyError(name)
-    return _DEFAULT_ENGINES[name]
+        if backend == "scan":
+            cls = CaesarTile if name == "caesar" else CarusTile
+        else:
+            from repro.nmc.pallas_engine import (PallasCaesarEngine,
+                                                 PallasCarusEngine)
+            cls = PallasCaesarEngine if name == "caesar" \
+                else PallasCarusEngine
+        _DEFAULT_ENGINES[key] = cls()
+    return _DEFAULT_ENGINES[key]
+
+
+def implementations() -> tuple[tuple[str, str], ...]:
+    """All registered ``(engine, backend)`` variants — the conformance
+    matrix ``tests/test_engines.py`` sweeps."""
+    return tuple((n, b) for n in ("caesar", "carus") for b in BACKENDS)

@@ -1036,6 +1036,16 @@ def _check_engine(engine: str) -> str:
     return engine
 
 
+def _check_backend(backend: str) -> str:
+    """Eager backend-name validation (same discipline as
+    :func:`_check_engine`): ``"auto"``, ``"scan"`` or ``"pallas"``."""
+    from repro.nmc.engine import BACKENDS
+    if backend != "auto" and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}: expected 'auto' or "
+                         f"one of {BACKENDS}")
+    return backend
+
+
 def _check_tiles(tiles) -> int:
     try:
         n = int(tiles)
@@ -1058,11 +1068,12 @@ class CompiledKernel:
 
     def __init__(self, fn: Callable, engine: str = "auto", sew: int = 8,
                  runtime: Optional[NmcRuntime] = None, tiles: int = 1,
-                 partition: str = "auto"):
+                 partition: str = "auto", backend: str = "auto"):
         # kwargs validate eagerly: a typo'd engine string or an impossible
         # tile count must fail at decoration time with a named cause, not
         # as a deep-stack assertion at first call
         _check_engine(engine)
+        _check_backend(backend)
         if sew not in alu.SEWS:
             raise ValueError(
                 f"unsupported sew {sew!r}: expected one of "
@@ -1077,6 +1088,7 @@ class CompiledKernel:
         self.sew = sew
         self.tiles = tiles
         self.partition = partition
+        self.backend = backend
         self._runtime = runtime
         self.__name__ = getattr(fn, "__name__", "kernel")
         self.__doc__ = getattr(fn, "__doc__", None)
@@ -1144,15 +1156,29 @@ class CompiledKernel:
 
     # -- execution -----------------------------------------------------------
     def __call__(self, *args, engine: Optional[str] = None,
-                 tiles: Optional[int] = None) -> np.ndarray:
+                 tiles: Optional[int] = None,
+                 backend: Optional[str] = None) -> np.ndarray:
         """Synchronous call: submit and resolve immediately.  Shares the
         async path's tiles and jit cache, so sync and async are bit-exact
         by construction and device state stays bounded (one resident
         buffer per runtime tile, re-installed per call)."""
-        return self.call_async(*args, engine=engine, tiles=tiles).result()
+        return self.call_async(*args, engine=engine, tiles=tiles,
+                               backend=backend).result()
+
+    def resolve_backend(self, backend: Optional[str] = None) -> str:
+        """The executor this call will use: per-call override > kernel
+        default > runtime default; ``"auto"`` follows the runtime, whose
+        own ``"auto"`` picks Pallas on TPU/GPU and scan on CPU."""
+        from repro.nmc.engine import resolve_backend
+        bk = self.backend if backend is None else _check_backend(backend)
+        if bk == "auto":
+            rt_bk = getattr(self.runtime, "backend", None)
+            return rt_bk if rt_bk is not None else resolve_backend("auto")
+        return bk
 
     def call_async(self, *args, engine: Optional[str] = None,
-                   tiles: Optional[int] = None):
+                   tiles: Optional[int] = None,
+                   backend: Optional[str] = None):
         """Submit through the runtime's DispatchQueue; returns the future
         immediately (double-buffered staging, batched launch waves).
 
@@ -1168,22 +1194,25 @@ class CompiledKernel:
         single-tile path by construction).  Per-tile FIFO order keeps any
         number of in-flight futures correct either way."""
         n = self.tiles if tiles is None else _check_tiles(tiles)
+        bk = self.resolve_backend(backend)
         rt = self.runtime
         if n == 1:
             lk = self.lower(*args, engine=engine)
             return rt.queue.submit(rt.jit_tile, lk.program, image=lk.mem,
-                                   out_slice=lk.out_slice, post=lk.post)
+                                   out_slice=lk.out_slice, post=lk.post,
+                                   backend=bk)
         from repro.nmc.runtime import GatherFuture
         pplan, lks = self.lower_wave(*args, engine=engine, tiles=n)
         futs = [rt.queue.submit(tile, lk.program, image=lk.mem,
-                                out_slice=lk.out_slice, post=lk.post)
+                                out_slice=lk.out_slice, post=lk.post,
+                                backend=bk)
                 for tile, lk in zip(rt.jit_tiles(len(lks)), lks)]
         return GatherFuture(futs, pplan.gather)
 
 
 def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
         runtime: Optional[NmcRuntime] = None, tiles: int = 1,
-        partition: str = "auto"):
+        partition: str = "auto", backend: str = "auto"):
     """Compile a traced kernel function into a :class:`CompiledKernel`.
 
     ``engine`` is ``"auto"`` (NM-Caesar when bus-expressible, NM-Carus
@@ -1192,15 +1221,18 @@ def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
     op.  ``sew`` is the element width (8/16/32).  ``tiles`` shards every
     call across that many tiles through the partitioning planner
     (DESIGN.md §9) — ``partition`` picks the split strategy (``"auto"``,
-    ``"rows"``, ``"axis"``).  All kwargs validate eagerly with
-    ``ValueError``.  Usable as a decorator (``@nmc.jit`` /
-    ``@nmc.jit(engine="carus", tiles=4)``) or a call."""
+    ``"rows"``, ``"axis"``).  ``backend`` picks the executor
+    (DESIGN.md §10): ``"scan"`` (reference interpreters), ``"pallas"``
+    (fused kernels), or ``"auto"`` (Pallas on TPU/GPU, scan on CPU).
+    All kwargs validate eagerly with ``ValueError``.  Usable as a
+    decorator (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``) or a
+    call."""
     if fn is None:
         return lambda f: CompiledKernel(f, engine=engine, sew=sew,
                                         runtime=runtime, tiles=tiles,
-                                        partition=partition)
+                                        partition=partition, backend=backend)
     return CompiledKernel(fn, engine=engine, sew=sew, runtime=runtime,
-                          tiles=tiles, partition=partition)
+                          tiles=tiles, partition=partition, backend=backend)
 
 
 def kernel(fn: Optional[Callable] = None, **options):

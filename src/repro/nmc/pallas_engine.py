@@ -1,0 +1,345 @@
+"""Pallas fast-path engine backend (DESIGN.md §10).
+
+The scan engines (:mod:`repro.core.caesar` / :mod:`repro.core.carus`)
+interpret one instruction per ``lax.scan`` step with a ``lax.switch`` over
+the opcode — bit-exact, but the throughput ceiling of every sweep in the
+repo.  This module is the third implementation of the
+:class:`repro.nmc.engine.Engine` protocol: it lowers a bucketed
+:class:`repro.nmc.program.Program` wave to a **single** ``pl.pallas_call``
+that keeps each tile's entire memory image resident in fast kernel memory
+(VMEM on TPU; the interpreter's buffer on CPU) for the whole instruction
+stream — the paper's near-memory thesis applied to the simulator itself:
+N instructions cost one memory round-trip, not N.
+
+Lowering contract (the shape every kernel variant shares):
+
+* **tile-batch dimension → Pallas grid.**  A wave of T same-bucket
+  programs runs as ``grid=(T,)``; block specs slice tile ``t``'s
+  instruction stream ``[1, n_instr]`` and its lane-decomposed memory image
+  ``[1, state_rows, n_elems]`` out of the batch.  Tiles are independent by
+  construction (the pool's vmap contract), so grid steps never
+  communicate.
+* **memory image → resident lanes ref.**  The int32 word image is
+  unpacked once per call into *native-dtype lanes* (int8/int16/int32 —
+  one dtype-specialized kernel per SEW) and packed back once at the end;
+  ``input_output_aliases`` makes the state ref in-place.  Native-dtype
+  arithmetic gives two's-complement wraparound at SEW for free, which is
+  exactly the per-step pack/unpack truncation of the scan engines.
+* **instruction stream → ``fori_loop`` over a branch-free step.**
+  Instructions stay *runtime data* (the bucketed compile cache keys on
+  shape, never on contents), so the kernel cannot specialize per opcode.
+  Instead of a ``lax.switch``, every step computes all candidate results,
+  stacks them ``[n_ops, n_elems]``, selects row ``op``, and performs one
+  conditional scatter — no branches, one dynamic write per instruction.
+* **SEW specialization.**  ``sew`` is a static argument of the kernel
+  factory; the :class:`repro.nmc.pool.BucketedPool` cache key
+  ``(engine, sew, instr-bucket, tile-bucket, backend)`` therefore maps
+  one-to-one onto compiled Pallas kernels.
+* **CPU fallback.**  ``interpret=True`` is selected automatically when no
+  TPU/GPU is attached, so the whole backend (and its differential tests)
+  runs everywhere; ``backend="auto"`` in the frontend picks Pallas only
+  on accelerators, where the fused kernel is the fast path.
+
+Semantics are bit-exact vs the scan engines and the ``alu.*_np`` numpy
+oracles at SEW 8/16/32 — property-fuzzed in ``tests/test_differential.py``
+and conformance-tested per opcode in ``tests/test_engines.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import alu, isa
+from repro.core.isa import CaesarOp, VOp
+from repro.nmc.engine import CaesarTile, CarusTile
+
+JNP_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+JNP_UDTYPES = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless a real accelerator is attached."""
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+# ---------------------------------------------------------------------------
+# NM-Caesar kernel: flat word memory as [mem_words, L] native-dtype lanes
+# ---------------------------------------------------------------------------
+
+def _caesar_kernel(op_ref, dest_ref, s1_ref, s2_ref, lanes_in_ref,
+                   lanes_out_ref, *, sew: int):
+    L = 32 // sew
+    dt, udt = JNP_DTYPES[sew], JNP_UDTYPES[sew]
+    n_ops = len(CaesarOp)
+    lanes_out_ref[...] = lanes_in_ref[...]
+
+    def step(i, carry):
+        mac, dot = carry
+        op = op_ref[0, i]
+        dest = dest_ref[0, i]
+        a = lanes_out_ref[0, s1_ref[0, i]]
+        b = lanes_out_ref[0, s2_ref[0, i]]
+        au, bu = a.astype(udt), b.astype(udt)
+        # RVV shift semantics: amount mod SEW ((x mod 2^SEW) mod SEW is
+        # the same because SEW is a power of two <= 2^SEW)
+        sh = bu % udt(sew)
+        rows = [a] * n_ops
+        rows[int(CaesarOp.AND)] = a & b
+        rows[int(CaesarOp.OR)] = a | b
+        rows[int(CaesarOp.XOR)] = a ^ b
+        rows[int(CaesarOp.ADD)] = a + b
+        rows[int(CaesarOp.SUB)] = a - b
+        rows[int(CaesarOp.MUL)] = a * b
+        rows[int(CaesarOp.SLL)] = (au << sh).astype(dt)
+        rows[int(CaesarOp.SLR)] = (au >> sh).astype(dt)
+        rows[int(CaesarOp.SRA)] = a >> sh.astype(dt)
+        rows[int(CaesarOp.MIN)] = jnp.minimum(a, b)
+        rows[int(CaesarOp.MAX)] = jnp.maximum(a, b)
+        # packed MAC accumulator (native lanes == per-step pack truncation)
+        prod = a * b
+        mac_new = jnp.where(op == int(CaesarOp.MAC_INIT), prod, mac + prod)
+        is_mac = (op >= int(CaesarOp.MAC_INIT)) & \
+            (op <= int(CaesarOp.MAC_STORE))
+        mac = jnp.where(is_mac, mac_new, mac)
+        # 32-bit DOT accumulator: sum of sign-extended lane products
+        dsum = (a.astype(jnp.int32) * b.astype(jnp.int32)).sum()
+        dot_new = jnp.where(op == int(CaesarOp.DOT_INIT), dsum, dot + dsum)
+        is_dot = (op >= int(CaesarOp.DOT_INIT)) & \
+            (op <= int(CaesarOp.DOT_STORE))
+        dot = jnp.where(is_dot, dot_new, dot)
+        rows[int(CaesarOp.MAC_STORE)] = mac
+        # DOT_STORE writes the scalar as one packed word (= unpack(dot))
+        rows[int(CaesarOp.DOT_STORE)] = jnp.stack(
+            [(dot >> (k * sew)).astype(dt) for k in range(L)])
+        val = jnp.stack(rows)[op]
+        is_binop = (op <= int(CaesarOp.MUL)) | \
+            ((op >= int(CaesarOp.SLL)) & (op <= int(CaesarOp.MAX))) | \
+            (op == int(CaesarOp.SRA))
+        writes = is_binop | (op == int(CaesarOp.MAC_STORE)) | \
+            (op == int(CaesarOp.DOT_STORE))
+        cur = lanes_out_ref[0, dest]
+        lanes_out_ref[0, dest] = jnp.where(writes, val, cur)
+        return mac, dot
+
+    # zero carries without captured constant arrays (Pallas kernels must
+    # not close over traced constants): derive the MAC zeros from a read
+    mac0 = lanes_in_ref[0, 0] * 0
+    jax.lax.fori_loop(0, op_ref.shape[1], step, (mac0, jnp.int32(0)))
+
+
+@functools.lru_cache(maxsize=None)
+def _caesar_call(sew: int, n_instr: int, n_tiles: int, mem_words: int,
+                 interpret: bool):
+    L = 32 // sew
+    ispec = pl.BlockSpec((1, n_instr), lambda t: (t, 0))
+    lspec = pl.BlockSpec((1, mem_words, L), lambda t: (t, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_caesar_kernel, sew=sew),
+        grid=(n_tiles,),
+        in_specs=[ispec, ispec, ispec, ispec, lspec],
+        out_specs=lspec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, mem_words, L),
+                                       JNP_DTYPES[sew]),
+        input_output_aliases={4: 0},
+        interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# NM-Carus kernel: VRF as [n_regs, n_elems] native-dtype element rows
+# ---------------------------------------------------------------------------
+
+def _carus_kernel(op_ref, vd_ref, vs1_ref, vs2_ref, sval1_ref, sval2_ref,
+                  imm_ref, mode_ref, ids_ref, elems_in_ref, elems_out_ref,
+                  *, sew: int, n_regs: int, vlmax: int):
+    dt, udt = JNP_DTYPES[sew], JNP_UDTYPES[sew]
+    n_elems = elems_in_ref.shape[2]
+    n_vops = len(isa.VOP_COMPACT)
+    cid = isa.COMPACT_ID
+    elems_out_ref[...] = elems_in_ref[...]
+    ids = ids_ref[...]                      # iota passed as input (no
+                                            # captured constants in kernels)
+
+    def step(i, vl):
+        op = op_ref[0, i]
+        sval1, sval2 = sval1_ref[0, i], sval2_ref[0, i]
+        imm, mode = imm_ref[0, i], mode_ref[0, i]
+        indirect = (mode & isa.MODE_INDIRECT) != 0
+        slide1 = (mode & isa.MODE_SLIDE1) != 0
+        opmode = mode & 0x3
+        # indirect register addressing: indices from sval2's LSBytes
+        vd = jnp.where(indirect, (sval2 >> 16) & 0xFF, vd_ref[0, i]) % n_regs
+        vs2 = jnp.where(indirect, (sval2 >> 8) & 0xFF, vs2_ref[0, i]) % n_regs
+        vs1 = jnp.where(indirect, sval2 & 0xFF, vs1_ref[0, i]) % n_regs
+        dst = elems_out_ref[0, vd]
+        s2 = elems_out_ref[0, vs2]
+        s1r = elems_out_ref[0, vs1]
+        scalar_b = jnp.where(opmode == isa.MODE_VI, imm, sval1)     # int32
+        b = jnp.where(opmode == isa.MODE_VV, s1r, scalar_b.astype(dt))
+
+        rows = [dst] * n_vops
+        # wraparound-closed ops compute directly in the native dtype
+        rows[cid[VOp.VADD]] = s2 + b
+        rows[cid[VOp.VSUB]] = s2 - b
+        rows[cid[VOp.VMUL]] = s2 * b
+        rows[cid[VOp.VAND]] = s2 & b
+        rows[cid[VOp.VOR]] = s2 | b
+        rows[cid[VOp.VXOR]] = s2 ^ b
+        # signed min/max compare the *untruncated* vx/vi scalar (the scan
+        # engine's lanes are sign-extended int32; truncation happens at
+        # pack) — widen to int32, select, then truncate the winner
+        b32 = jnp.where(opmode == isa.MODE_VV, s1r.astype(jnp.int32),
+                        scalar_b)
+        a32 = s2.astype(jnp.int32)
+        rows[cid[VOp.VMIN]] = jnp.minimum(a32, b32).astype(dt)
+        rows[cid[VOp.VMAX]] = jnp.maximum(a32, b32).astype(dt)
+        # unsigned min/max compare SEW-bit zero-extensions (truncation-
+        # invariant) and return the original lane values
+        au, bu = s2.astype(udt), b.astype(udt)
+        rows[cid[VOp.VMINU]] = jnp.where(au <= bu, s2, b)
+        rows[cid[VOp.VMAXU]] = jnp.where(au >= bu, s2, b)
+        sh = bu % udt(sew)
+        rows[cid[VOp.VSLL]] = (au << sh).astype(dt)
+        rows[cid[VOp.VSRL]] = (au >> sh).astype(dt)
+        rows[cid[VOp.VSRA]] = s2 >> sh.astype(dt)
+        rows[cid[VOp.VMACC]] = dst + s2 * b
+        rows[cid[VOp.VMV]] = b
+        # slides: gather from vs2 at ids -/+ offset; MODE_SLIDE1 inserts
+        # the scalar at the exposed edge element
+        off = jnp.where(slide1, 1, scalar_b)
+        idx_up = ids - off
+        g_up = s2[jnp.clip(idx_up, 0, n_elems - 1)]
+        r_up = jnp.where(idx_up >= 0, g_up, dst)
+        rows[cid[VOp.VSLIDEUP]] = jnp.where(
+            slide1 & (ids == 0), sval1.astype(dt), r_up)
+        idx_dn = ids + off
+        g_dn = s2[jnp.clip(idx_dn, 0, n_elems - 1)]
+        r_dn = jnp.where(idx_dn < vl, g_dn, jnp.zeros_like(dst))
+        rows[cid[VOp.VSLIDEDOWN]] = jnp.where(
+            slide1 & (ids == vl - 1), sval1.astype(dt), r_dn)
+        # EMVV writes one element (full-length writeback, ignores VL)
+        rows[cid[VOp.EMVV]] = jnp.where(
+            ids == sval2 % n_elems, sval1.astype(dt), dst)
+        # EMVX (scan-output only), VSETVL and VNOP leave the VRF untouched
+        val = jnp.stack(rows)[op]
+        writes = op <= cid[VOp.EMVV]
+        vl_eff = jnp.where(op == cid[VOp.EMVV], n_elems, vl)
+        sel = jnp.where(ids < vl_eff, val, dst)     # tail-undisturbed
+        elems_out_ref[0, vd] = jnp.where(writes, sel, dst)
+        return jnp.where(op == cid[VOp.VSETVL],
+                         jnp.minimum(sval1, vlmax), vl)
+
+    jax.lax.fori_loop(0, op_ref.shape[1], step, jnp.int32(vlmax))
+
+
+@functools.lru_cache(maxsize=None)
+def _carus_call(sew: int, n_instr: int, n_tiles: int, n_regs: int,
+                reg_words: int, interpret: bool):
+    L = 32 // sew
+    n_elems = reg_words * L
+    vlmax = reg_words * (32 // sew)
+    ispec = pl.BlockSpec((1, n_instr), lambda t: (t, 0))
+    idspec = pl.BlockSpec((n_elems,), lambda t: (0,))
+    espec = pl.BlockSpec((1, n_regs, n_elems), lambda t: (t, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_carus_kernel, sew=sew, n_regs=n_regs,
+                          vlmax=vlmax),
+        grid=(n_tiles,),
+        in_specs=[ispec] * 8 + [idspec, espec],
+        out_specs=espec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, n_regs, n_elems),
+                                       JNP_DTYPES[sew]),
+        input_output_aliases={9: 0},
+        interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Engine-protocol adapters
+# ---------------------------------------------------------------------------
+
+class _PallasMixin:
+    """Shared plumbing: per-(sew, tiles) jit cache, scan_fn/run adapters."""
+
+    backend = "pallas"
+
+    def _init_backend(self, interpret):
+        self.interpret = default_interpret() if interpret is None \
+            else bool(interpret)
+        self._fns: dict = {}
+
+    def batched_fn(self, sew: int, n_tiles: int, donate: bool = False):
+        """``(batch_state[T, ...], batch_arrays[T, n]) -> batch_state`` —
+        the pool-facing executor (one fused pallas_call per wave); the
+        drop-in replacement for ``jit(vmap(scan_fn(sew)))``."""
+        key = (sew, n_tiles, donate)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._run_batch, sew, n_tiles),
+                         donate_argnums=(0,) if donate else ())
+            self._fns[key] = fn
+        return fn
+
+    def scan_fn(self, sew: int):
+        """Single-tile flavor of :meth:`batched_fn` (grid of one).  The
+        pool never vmaps this — ``TilePool._batched_fn`` prefers
+        ``batched_fn`` — but it keeps the Engine protocol complete."""
+        fn = self.batched_fn(sew, 1)
+
+        def run_one(state, arrays):
+            batch = {k: jnp.asarray(v)[None] for k, v in arrays.items()}
+            return fn(jnp.asarray(state)[None], batch)[0]
+
+        return run_one
+
+    def run(self, state, program):
+        assert program.engine == self.name, (program.engine, self.name)
+        return self.scan_fn(program.sew)(state, program.lower())
+
+
+class PallasCaesarEngine(_PallasMixin, CaesarTile):
+    """NM-Caesar tile on the Pallas fast path: the 8192-word memory image
+    resident as ``[mem_words, L]`` native-dtype lanes for the whole
+    instruction stream."""
+
+    def __init__(self, config=None, interpret: bool | None = None):
+        super().__init__(config)
+        self._init_backend(interpret)
+
+    def _run_batch(self, sew, n_tiles, batch_state, arrays):
+        dt = JNP_DTYPES[sew]
+        call = _caesar_call(sew, int(arrays["op"].shape[-1]), n_tiles,
+                            self.sim.cfg.mem_words, self.interpret)
+        lanes = alu.unpack(batch_state, sew).astype(dt)
+        out = call(arrays["op"], arrays["dest"], arrays["src1"],
+                   arrays["src2"], lanes)
+        return alu.pack(out.astype(jnp.int32), sew)
+
+
+class PallasCarusEngine(_PallasMixin, CarusTile):
+    """NM-Carus tile on the Pallas fast path: the VRF resident as
+    ``[n_regs, n_elems]`` native-dtype element rows, VL carried through
+    the ``fori_loop``."""
+
+    def __init__(self, config=None, interpret: bool | None = None):
+        super().__init__(config)
+        self._init_backend(interpret)
+
+    def _run_batch(self, sew, n_tiles, batch_state, arrays):
+        dt = JNP_DTYPES[sew]
+        cfg = self.sim.cfg
+        L = 32 // sew
+        call = _carus_call(sew, int(arrays["op"].shape[-1]), n_tiles,
+                           cfg.n_regs, cfg.reg_words, self.interpret)
+        elems = alu.unpack(batch_state, sew).astype(dt).reshape(
+            batch_state.shape[0], cfg.n_regs, cfg.reg_words * L)
+        ids = jnp.arange(cfg.reg_words * L, dtype=jnp.int32)
+        out = call(arrays["op"], arrays["vd"], arrays["vs1"], arrays["vs2"],
+                   arrays["sval1"], arrays["sval2"], arrays["imm"],
+                   arrays["mode"], ids, elems)
+        words = alu.pack(out.reshape(batch_state.shape[0], cfg.n_regs,
+                                     cfg.reg_words, L).astype(jnp.int32),
+                         sew)
+        return words

@@ -5,8 +5,9 @@ identical NM-Caesar / NM-Carus tiles across its SRAM macros, each running its
 own program against its own memory.  This module models that at three levels:
 
 * :class:`TilePool` — T independent tiles execute T same-shape programs in
-  one ``jax.vmap`` over the existing ``lax.scan`` engines, jit-cached per
-  exact ``(engine, sew, n_instr, n_tiles)``.
+  one batched executor (``jax.vmap`` over the ``lax.scan`` engines, or one
+  fused Pallas grid when ``backend="pallas"``), jit-cached per exact
+  ``(engine, sew, n_instr, n_tiles, backend)``.
 * :class:`BucketedPool` — the shape-bucketed scheduler: instruction streams
   NOP-pad to power-of-two buckets (:func:`repro.nmc.program.instr_bucket`)
   and partial tile batches pad to power-of-two tile counts
@@ -32,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nmc.engine import get_engine
+from repro.nmc.engine import get_engine, resolve_backend
 from repro.nmc.program import (PROG_DTYPE, Program, instr_bucket,
                                stack_programs)
 
@@ -64,21 +65,32 @@ class TilePool:
     :class:`BucketedPool` overrides all three.
     """
 
-    def __init__(self, donate: bool = False):
+    def __init__(self, donate: bool = False, backend: str = "scan"):
         self._cache: dict[tuple, object] = {}
         self._donate = donate
+        self.backend = resolve_backend(backend)
         self.compiles = 0          # distinct traces (cache misses)
         self.dispatches = 0        # batched device executions
         self.programs_run = 0      # total (real) tile-programs executed
 
     # -- compile cache -------------------------------------------------------
-    def _batched_fn(self, shape_key: tuple, n_tiles: int):
-        key = (*shape_key, n_tiles)
+    def _batched_fn(self, shape_key: tuple, n_tiles: int,
+                    backend: str | None = None):
+        backend = self.backend if backend is None \
+            else resolve_backend(backend)
+        key = (*shape_key, n_tiles, backend)
         fn = self._cache.get(key)
         if fn is None:
             engine_name, sew, _ = shape_key
-            fn = jax.jit(jax.vmap(get_engine(engine_name).scan_fn(sew)),
-                         donate_argnums=(0,) if self._donate else ())
+            engine = get_engine(engine_name, backend)
+            make = getattr(engine, "batched_fn", None)
+            if make is not None:
+                # fused-kernel backends build the whole tile batch in one
+                # call (Pallas grid) instead of vmapping the scan step
+                fn = make(sew, n_tiles, donate=self._donate)
+            else:
+                fn = jax.jit(jax.vmap(engine.scan_fn(sew)),
+                             donate_argnums=(0,) if self._donate else ())
             self._cache[key] = fn
             self.compiles += 1
         return fn
@@ -164,9 +176,10 @@ class BucketedPool(TilePool):
       download (the von-Neumann tax :class:`ResidentPool` removes).
     """
 
-    def __init__(self, donate: bool = False):
-        super().__init__(donate=donate)
+    def __init__(self, donate: bool = False, backend: str = "scan"):
+        super().__init__(donate=donate, backend=backend)
         self.pad_waste = 0
+        self.useful_instrs = 0
         self.bytes_moved = 0
 
     def _group_key(self, p: Program) -> tuple:
@@ -183,6 +196,7 @@ class BucketedPool(TilePool):
         bucket = programs[0].n_instr
         real = sum(p.n_instr - p.n_nops for p in programs)
         self.pad_waste += bucket * n_tiles - real
+        self.useful_instrs += real
         self.bytes_moved += (n_tiles * bucket * PROG_DTYPE.itemsize
                              + batch_state.size * WORD_BYTES
                              + final.size * WORD_BYTES)
@@ -206,8 +220,10 @@ class ResidentPool:
     cost is O(program), not O(tile memory).
     """
 
-    def __init__(self, pool: BucketedPool | None = None):
-        self.pool = pool if pool is not None else BucketedPool(donate=True)
+    def __init__(self, pool: BucketedPool | None = None,
+                 backend: str = "scan"):
+        self.pool = pool if pool is not None \
+            else BucketedPool(donate=True, backend=backend)
         self._engine: dict = {}      # tile id -> engine name
         self._state: dict = {}       # tile id -> resident device state
         self._ids = itertools.count()
@@ -257,13 +273,15 @@ class ResidentPool:
         return elems
 
     # -- compute mode --------------------------------------------------------
-    def dispatch(self, assignments: list[tuple]) -> None:
+    def dispatch(self, assignments: list[tuple],
+                 backend: str | None = None) -> None:
         """Execute ``(tile, program)`` pairs against the resident states.
 
         Grouped by bucket key and batched through the shared jit cache like
         :class:`BucketedPool`; final states replace the resident buffers
         without ever leaving the device.  Only the instruction streams are
-        uploaded (counted in ``bytes_moved``).
+        uploaded (counted in ``bytes_moved``).  ``backend`` overrides the
+        wrapped pool's default executor ("scan"/"pallas") for this wave.
 
         One dispatch is one parallel step across the tile array, so a tile
         may appear at most once per call — chained programs on one tile are
@@ -289,13 +307,20 @@ class ResidentPool:
             batch_state = jnp.stack(states)
             batch_arrays = {k: jnp.asarray(v)
                             for k, v in stack_programs(progs).items()}
-            fn = self.pool._batched_fn(progs[0].shape_key, tb)
+            fn = self.pool._batched_fn(progs[0].shape_key, tb,
+                                       backend=backend)
             final = fn(batch_state, batch_arrays)    # stays on device
             for t, tile in enumerate(tiles):
                 self._state[tile] = final[t]
             self.dispatches += 1
             self.programs_run += len(tiles)
             self.bytes_moved += tb * bucket * PROG_DTYPE.itemsize
+            # ragged-tail visibility: resident waves report padding waste
+            # into the wrapped pool's counters exactly like stateless runs
+            # (NOP tails of real programs + whole replicated padding lanes)
+            real = sum(p.n_instr - p.n_nops for _, p in group)
+            self.pool.pad_waste += bucket * tb - real
+            self.pool.useful_instrs += real
 
     # -- convenience ---------------------------------------------------------
     def run_builds(self, builds: list, queue=None) -> list[np.ndarray]:

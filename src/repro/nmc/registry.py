@@ -82,11 +82,13 @@ class NmcRuntime:
     one shard per tile.
     """
 
-    def __init__(self, mode: str = "overlapped"):
+    def __init__(self, mode: str = "overlapped", backend: str = "auto"):
+        from repro.nmc.engine import resolve_backend
         from repro.nmc.pool import BucketedPool, ResidentPool
         from repro.nmc.runtime import DispatchQueue
 
-        self.bucketed = BucketedPool(donate=True)
+        self.backend = resolve_backend(backend)
+        self.bucketed = BucketedPool(donate=True, backend=self.backend)
         self.resident = ResidentPool(pool=self.bucketed)
         self.queue = DispatchQueue(pool=self.resident, mode=mode)
 
@@ -102,6 +104,7 @@ class NmcRuntime:
         rt.bucketed = queue.pool.pool
         rt.resident = queue.pool
         rt.queue = queue
+        rt.backend = rt.bucketed.backend
         return rt
 
     def jit_tiles(self, n: int) -> tuple:

@@ -186,6 +186,7 @@ class _WorkItem:
     engine: str
     future: NMCFuture
     prev: Optional[NMCFuture]       # preceding future on this tile, if any
+    backend: Optional[str] = None   # executor override for this item's wave
 
 
 class DispatchQueue:
@@ -222,7 +223,8 @@ class DispatchQueue:
     # -- submission ----------------------------------------------------------
     def submit(self, tile, program: Program, image=None,
                out_slice: Optional[tuple[int, int]] = None,
-               post: Optional[Callable] = None) -> NMCFuture:
+               post: Optional[Callable] = None,
+               backend: Optional[str] = None) -> NMCFuture:
         """Queue one work item; returns its future immediately.
 
         ``image`` (optional) is the host image to stage into the tile's
@@ -232,14 +234,16 @@ class DispatchQueue:
         otherwise when the item's launch wave is assembled (right after the
         previous wave dispatched, so the transfer overlaps the in-flight
         compute either way).  Without an image the program chains against
-        the tile's current resident state."""
+        the tile's current resident state.  ``backend`` (optional) pins the
+        item to an executor ("scan"/"pallas"); waves group per backend at
+        launch, default follows the pool."""
         prev = self._last.get(tile)
         if image is not None and self.mode == "inorder" \
                 and prev is not None and not prev.done:
             prev.state()            # serial DMA: wait before staging
         fut = NMCFuture(self, tile, program, out_slice, post)
         item = _WorkItem(tile, program, image, None, program.engine, fut,
-                         prev)
+                         prev, backend)
         # depth-2 double buffering: at most one staged shadow buffer per
         # tile ahead of the resident (possibly computing) state
         if image is not None and not self._staged_pending.get(tile):
@@ -290,7 +294,12 @@ class DispatchQueue:
             if it.staged is not None:
                 self.pool.install(it.tile, it.engine, it.staged)
                 self._staged_pending[it.tile] -= 1
-        self.pool.dispatch([(it.tile, it.program) for it in wave])
+        by_backend: dict = {}
+        for it in wave:
+            by_backend.setdefault(it.backend, []).append(it)
+        for backend, items in by_backend.items():
+            self.pool.dispatch([(it.tile, it.program) for it in items],
+                               backend=backend)
         for it in wave:             # capture this wave's final state per item
             it.future._final = self.pool.state(it.tile)
         self.launched += len(wave)

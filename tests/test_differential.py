@@ -1,11 +1,14 @@
-"""Property-based differential fuzzer: scan engines vs a pure-numpy oracle.
+"""Property-based differential fuzzer: engine backends vs a numpy oracle.
 
 Random unified-IR programs (hypothesis-generated, or the deterministic
-vendored shim offline) execute on the ``lax.scan`` engines and are checked
+vendored shim offline) execute on **every registered engine backend** —
+the ``lax.scan`` interpreters and the fused Pallas kernels (interpret mode
+on CPU, so this fuzz coverage needs no accelerator) — and are checked
 **bit-exact** against independent numpy interpreters built on the
 ``repro.core.alu`` numpy mirrors (``lane_binop_np`` & co.) — an entirely
 separate evaluation path: no JAX, no tracing, plain int64 arithmetic with
-truncation at pack time.  Three properties, each across SEW in {8, 16, 32}:
+truncation at pack time.  Three properties, each across SEW in {8, 16, 32}
+and backend in {scan, pallas}:
 
 * random NM-Caesar bus-op programs (all binops + MAC/DOT accumulator chains
   + NOPs, random addresses) match the numpy memory-image interpreter;
@@ -30,7 +33,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import alu, isa
 from repro.core.carus import CarusConfig
 from repro.core.isa import CaesarOp, VOp
-from repro.nmc.engine import get_engine
+from repro.nmc.engine import BACKENDS, get_engine
 from repro.nmc.program import Program, caesar_entry, carus_entry
 
 SEWS = (8, 16, 32)
@@ -142,8 +145,9 @@ def carus_oracle(vrf: np.ndarray, prog: Program) -> np.ndarray:
     return vrf
 
 
-def _run_engine(prog: Program, state: np.ndarray) -> np.ndarray:
-    eng = get_engine(prog.engine)
+def _run_engine(prog: Program, state: np.ndarray,
+                backend: str = "scan") -> np.ndarray:
+    eng = get_engine(prog.engine, backend)
     return np.asarray(eng.run(eng.init_state(state), prog))
 
 
@@ -173,10 +177,11 @@ def test_numpy_alu_mirrors_match_jax(sew):
 # engine-specific fuzzers
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("sew", SEWS)
 @given(n_instr=st.integers(1, CAESAR_BUCKET - 1), seed=st.integers(0, 2**16))
 @settings(max_examples=8, deadline=None)
-def test_caesar_random_programs_match_oracle(sew, n_instr, seed):
+def test_caesar_random_programs_match_oracle(sew, backend, n_instr, seed):
     rng = np.random.default_rng(seed)
     ops = list(CAESAR_BINOPS) + [CaesarOp.MAC_INIT, CaesarOp.MAC,
                                  CaesarOp.MAC_STORE, CaesarOp.DOT_INIT,
@@ -191,16 +196,17 @@ def test_caesar_random_programs_match_oracle(sew, n_instr, seed):
         .pad_to(CAESAR_BUCKET)                 # one trace per SEW
     mem = rng.integers(-2**31, 2**31, CAESAR_MEM_WORDS,
                        dtype=np.int64).astype(np.int32)
-    got = _run_engine(prog, mem)
+    got = _run_engine(prog, mem, backend)
     exp = caesar_oracle(mem, prog)
     assert (got == exp).all(), \
-        (sew, seed, np.flatnonzero(got != exp)[:8])
+        (sew, backend, seed, np.flatnonzero(got != exp)[:8])
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("sew", SEWS)
 @given(n_instr=st.integers(1, CARUS_BUCKET - 1), seed=st.integers(0, 2**16))
 @settings(max_examples=8, deadline=None)
-def test_carus_random_traces_match_oracle(sew, n_instr, seed):
+def test_carus_random_traces_match_oracle(sew, backend, n_instr, seed):
     rng = np.random.default_rng(seed)
     cfg = CarusConfig()
     vlmax = cfg.vlmax(sew)
@@ -220,10 +226,10 @@ def test_carus_random_traces_match_oracle(sew, n_instr, seed):
     prog = Program.from_entries("carus", sew, entries).pad_to(CARUS_BUCKET)
     vrf = rng.integers(-2**31, 2**31, (cfg.n_regs, cfg.reg_words),
                        dtype=np.int64).astype(np.int32)
-    got = _run_engine(prog, vrf)
+    got = _run_engine(prog, vrf, backend)
     exp = carus_oracle(vrf, prog)
     assert (got == exp).all(), \
-        (sew, seed, np.argwhere(got != exp)[:8])
+        (sew, backend, seed, np.argwhere(got != exp)[:8])
 
 
 # ---------------------------------------------------------------------------
@@ -287,3 +293,69 @@ def test_cross_engine_chain_agrees(sew, n_ops, seed):
     assert (caesar_out == exp).all(), (sew, seed, chain)
     assert (carus_out == exp).all(), (sew, seed, chain)
     assert (caesar_out == carus_out).all()
+
+
+# ---------------------------------------------------------------------------
+# dispatch-path differential: the Pallas backend through the pools and the
+# async queue must match the numpy oracles exactly like direct engine runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sew", SEWS)
+def test_backend_parity_sync_and_async_dispatch(sew):
+    """Random Caesar/Carus waves through ``ResidentPool.dispatch`` (sync)
+    and ``DispatchQueue.submit`` (async, double-buffered) on backend
+    "pallas", checked against the numpy oracles and the scan dispatch
+    path — the whole scheduler stack, not just ``Engine.run``."""
+    from repro.nmc.pool import ResidentPool
+    from repro.nmc.runtime import DispatchQueue
+
+    rng = np.random.default_rng(sew)
+    ops = list(CAESAR_BINOPS) + [CaesarOp.MAC_INIT, CaesarOp.MAC,
+                                 CaesarOp.MAC_STORE]
+    cprogs, cmems = [], []
+    for _ in range(3):
+        entries = [caesar_entry(ops[rng.integers(len(ops))],
+                                int(rng.integers(CAESAR_MEM_WORDS)),
+                                int(rng.integers(CAESAR_MEM_WORDS)),
+                                int(rng.integers(CAESAR_MEM_WORDS)))
+                   for _ in range(CAESAR_BUCKET - 1)]
+        cprogs.append(Program.from_entries("caesar", sew, entries)
+                      .pad_to(CAESAR_BUCKET))
+        cmems.append(rng.integers(-2**31, 2**31, CAESAR_MEM_WORDS,
+                                  dtype=np.int64).astype(np.int32))
+    cfg = CarusConfig()
+    kentries = [carus_entry(VOp.VSETVL, sval1=int(cfg.vlmax(sew) // 2))] + [
+        carus_entry(list(CARUS_ARITH)[rng.integers(len(CARUS_ARITH))],
+                    vd=int(rng.integers(cfg.n_regs)),
+                    vs1=int(rng.integers(cfg.n_regs)),
+                    vs2=int(rng.integers(cfg.n_regs)),
+                    sval1=int(rng.integers(-2**31, 2**31)),
+                    imm=int(rng.integers(-16, 16)),
+                    mode=int(rng.integers(3)))
+        for _ in range(CARUS_BUCKET - 2)]
+    kprog = Program.from_entries("carus", sew, kentries).pad_to(CARUS_BUCKET)
+    kvrf = rng.integers(-2**31, 2**31, (cfg.n_regs, cfg.reg_words),
+                        dtype=np.int64).astype(np.int32)
+
+    oracles = [caesar_oracle(m, p) for p, m in zip(cprogs, cmems)] \
+        + [carus_oracle(kvrf, kprog)]
+    progs = cprogs + [kprog]
+    images = cmems + [kvrf]
+
+    for backend in BACKENDS:
+        # sync: one resident wave across 4 tiles
+        rp = ResidentPool(backend=backend)
+        for t, (p, img) in enumerate(zip(progs, images)):
+            rp.load(("t", t), p.engine, img)
+        rp.dispatch([(("t", t), p) for t, p in enumerate(progs)])
+        sync = [np.asarray(rp.state(("t", t)))
+                for t in range(len(progs))]
+        # async: same wave through the double-buffered queue
+        q = DispatchQueue(pool=ResidentPool(backend=backend))
+        futs = [q.submit(("t", t), p, image=img, backend=backend)
+                for t, (p, img) in enumerate(zip(progs, images))]
+        asyn = [np.asarray(f.state()) for f in futs]
+        for got_s, got_a, exp, p in zip(sync, asyn, oracles, progs):
+            exp = exp.reshape(got_s.shape)
+            assert (got_s == exp).all(), (backend, "sync", p.engine, sew)
+            assert (got_a == exp).all(), (backend, "async", p.engine, sew)

@@ -1,5 +1,7 @@
 """NM-Caesar / NM-Carus functional engines: bit-exact kernel verification,
-indirect register addressing, VL masking, and eCPU programmability."""
+indirect register addressing, VL masking, eCPU programmability, and the
+engine-protocol conformance matrix (every opcode through every registered
+backend implementation)."""
 
 import numpy as np
 import jax.numpy as jnp
@@ -8,6 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import alu, carus, caesar, ecpu, isa, programs
 from repro.core.isa import CaesarOp, VOp
+from repro.nmc import engine as nmc_engine
+from repro.nmc.program import Program, caesar_entry, carus_entry
 
 
 @pytest.mark.parametrize("name", programs.ALL_KERNELS)
@@ -121,3 +125,116 @@ def test_caesar_same_bank_timing_penalty():
     t1 = timing.caesar_cycles(both_diff)
     t2 = timing.caesar_cycles(both_same)
     assert t2.cycles - t1.cycles == 10  # +1 cycle per same-bank op
+
+# ---------------------------------------------------------------------------
+# Engine-protocol conformance matrix (DESIGN.md §10): one small golden
+# program per opcode, executed by every registered (engine, backend)
+# implementation; every implementation must produce the scan reference's
+# memory image bit-exactly.  Future backends get these checks for free by
+# registering in repro.nmc.engine.implementations().
+# ---------------------------------------------------------------------------
+
+CONF_BUCKET = 16    # all golden programs pad here: one compile per variant
+
+
+def _caesar_golden_cases():
+    """(label, entries) per NM-Caesar opcode; addresses span both banks."""
+    cases = []
+    for op in (CaesarOp.AND, CaesarOp.OR, CaesarOp.XOR, CaesarOp.ADD,
+               CaesarOp.SUB, CaesarOp.MUL, CaesarOp.SLL, CaesarOp.SLR,
+               CaesarOp.SRA, CaesarOp.MIN, CaesarOp.MAX):
+        cases.append((op.name.lower(), [
+            caesar_entry(op, 100 + i, 7 * i, 4096 + 11 * i)
+            for i in range(4)]))
+    cases.append(("mac_chain", [
+        caesar_entry(CaesarOp.MAC_INIT, 0, 3, 4096),
+        caesar_entry(CaesarOp.MAC, 0, 5, 4098),
+        caesar_entry(CaesarOp.MAC_STORE, 200, 9, 4100)]))
+    cases.append(("dot_chain", [
+        caesar_entry(CaesarOp.DOT_INIT, 0, 4, 4097),
+        caesar_entry(CaesarOp.DOT, 0, 6, 4099),
+        caesar_entry(CaesarOp.DOT_STORE, 201, 8, 4101)]))
+    # CSRW and NOP must leave memory untouched (an ADD proves the stream
+    # still executed around them)
+    cases.append(("csrw_nop", [
+        caesar_entry(CaesarOp.CSRW, 0, 1, 0),
+        caesar_entry(CaesarOp.NOP, 0, 0, 0),
+        caesar_entry(CaesarOp.ADD, 300, 1, 4097)]))
+    return [("caesar", label, entries) for label, entries in cases]
+
+
+def _carus_golden_cases():
+    """(label, entries) per NM-Carus vector opcode, VL-restricted so the
+    tail-undisturbed writeback is part of every golden image."""
+    pre = [carus_entry(VOp.VSETVL, sval1=777)]    # < vlmax at every SEW
+    cases = []
+    for vop in (VOp.VADD, VOp.VSUB, VOp.VMUL, VOp.VAND, VOp.VOR, VOp.VXOR,
+                VOp.VMIN, VOp.VMINU, VOp.VMAX, VOp.VMAXU, VOp.VSLL,
+                VOp.VSRL, VOp.VSRA, VOp.VMACC):
+        cases.append((vop.name.lower(), pre + [
+            carus_entry(vop, vd=4, vs1=1, vs2=2, mode=isa.MODE_VV),
+            carus_entry(vop, vd=5, vs2=2, sval1=-3, mode=isa.MODE_VX),
+            carus_entry(vop, vd=6, vs2=3, imm=7, mode=isa.MODE_VI)]))
+    cases.append(("vmv", pre + [
+        carus_entry(VOp.VMV, vd=7, vs1=1, mode=isa.MODE_VV),
+        carus_entry(VOp.VMV, vd=8, sval1=-120, mode=isa.MODE_VX)]))
+    cases.append(("vslideup", pre + [
+        carus_entry(VOp.VSLIDEUP, vd=9, vs2=2, sval1=5, mode=isa.MODE_VX),
+        carus_entry(VOp.VSLIDEUP, vd=10, vs2=2, sval1=42,
+                    mode=isa.MODE_VX | isa.MODE_SLIDE1)]))
+    cases.append(("vslidedown", pre + [
+        carus_entry(VOp.VSLIDEDOWN, vd=11, vs2=2, sval1=3, mode=isa.MODE_VX),
+        carus_entry(VOp.VSLIDEDOWN, vd=12, vs2=2, sval1=-9,
+                    mode=isa.MODE_VX | isa.MODE_SLIDE1)]))
+    cases.append(("emvv_emvx", pre + [
+        carus_entry(VOp.EMVV, vd=13, sval1=99, sval2=17),
+        carus_entry(VOp.EMVX, vd=0, vs2=2, sval1=5)]))
+    cases.append(("indirect", pre + [
+        carus_entry(VOp.VADD, sval2=isa.pack_indices(14, 2, 1),
+                    mode=isa.MODE_VV | isa.MODE_INDIRECT)]))
+    cases.append(("vsetvl_vnop", [
+        carus_entry(VOp.VSETVL, sval1=3),
+        carus_entry(VOp.VNOP),
+        carus_entry(VOp.VXOR, vd=15, vs1=1, vs2=2, mode=isa.MODE_VV)]))
+    return [("carus", label, entries) for label, entries in cases]
+
+
+CONFORMANCE_CASES = _caesar_golden_cases() + _carus_golden_cases()
+
+
+def _conformance_state(engine_name: str, sew: int) -> np.ndarray:
+    rng = np.random.default_rng(sew)
+    if engine_name == "caesar":
+        return rng.integers(-2**31, 2**31, 8192,
+                            dtype=np.int64).astype(np.int32)
+    return rng.integers(-2**31, 2**31, (32, 256),
+                        dtype=np.int64).astype(np.int32)
+
+
+@pytest.mark.parametrize("engine_name,label,entries", CONFORMANCE_CASES,
+                         ids=[f"{e}-{l}" for e, l, _ in CONFORMANCE_CASES])
+@pytest.mark.parametrize("backend", nmc_engine.BACKENDS)
+@pytest.mark.parametrize("sew", [8, 16, 32])
+def test_engine_conformance(engine_name, label, entries, backend, sew):
+    prog = Program.from_entries(engine_name, sew, entries) \
+        .pad_to(CONF_BUCKET)
+    state = _conformance_state(engine_name, sew)
+    ref_eng = nmc_engine.get_engine(engine_name, "scan")
+    ref = np.asarray(ref_eng.run(ref_eng.init_state(state), prog))
+    eng = nmc_engine.get_engine(engine_name, backend)
+    assert isinstance(eng, nmc_engine.Engine)
+    got = np.asarray(eng.run(eng.init_state(state), prog))
+    assert got.shape == ref.shape
+    assert (got == ref).all(), \
+        (engine_name, backend, label, sew,
+         np.argwhere(got != ref)[:8].tolist())
+
+
+def test_implementations_registry_is_complete():
+    impls = nmc_engine.implementations()
+    assert set(impls) == {(n, b) for n in ("caesar", "carus")
+                          for b in nmc_engine.BACKENDS}
+    for name, backend in impls:
+        eng = nmc_engine.get_engine(name, backend)
+        assert eng.name == name
+        assert isinstance(eng, nmc_engine.Engine)

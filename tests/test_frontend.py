@@ -324,6 +324,44 @@ def test_jit_kwargs_validate_eagerly():
                    partition="axis").tiles == 4
 
 
+def test_backend_kwarg_validates_eagerly():
+    """An unknown backend must raise a ValueError naming the valid set at
+    decoration time, and identically for per-call overrides."""
+    def body(t, x):
+        t.store(t.load(x) + 1)
+
+    with pytest.raises(ValueError, match="backend 'bogus'.*scan.*pallas"):
+        nmc.jit(body, backend="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        nmc.jit(body, backend=8)
+    k = nmc.jit(body, runtime=_RT)
+    with pytest.raises(ValueError, match="backend 'bogus'"):
+        k(_rand(16, 8), backend="bogus")
+    with pytest.raises(ValueError, match="backend 'bogus'"):
+        k.call_async(_rand(16, 8), backend="bogus")
+    # valid spellings construct; 'auto' resolves through the runtime
+    assert nmc.jit(body, backend="pallas").backend == "pallas"
+    assert nmc.jit(body, backend="auto", runtime=_RT).resolve_backend() \
+        in nmc.BACKENDS
+
+
+@pytest.mark.parametrize("sew", [8, 16, 32])
+def test_backend_pallas_bit_exact_vs_scan(sew):
+    """The same traced kernel through backend='pallas' must equal the
+    scan reference bit-for-bit — sync call and per-call override."""
+    x, y = _rand(128, sew), _rand(128, sew)
+
+    @nmc.jit(sew=sew, runtime=_RT)
+    def k(t, a, b):
+        t.store((t.load(a, bank=0) + t.load(b)) * t.load(a, bank=0))
+
+    ref = np.asarray(k(x, y, backend="scan"))
+    via_kwarg = np.asarray(k(x, y, backend="pallas"))
+    assert (via_kwarg == ref).all()
+    kp = nmc.jit(k.fn, sew=sew, runtime=_RT, backend="pallas")
+    assert (np.asarray(kp(x, y)) == ref).all()
+
+
 def test_mac_rejects_scalar_accumulator():
     """Regression: a non-traced accumulator used to be silently dropped
     (mac(5, a, b) computed a*b); it must raise instead."""
