@@ -9,7 +9,6 @@ Checks the paper's three qualitative claims about the power structure:
 from __future__ import annotations
 
 from repro.core import energy, programs, timing
-from repro.core import constants as C
 
 
 def run(sew: int = 8) -> dict:

@@ -65,7 +65,6 @@ def model_caesar() -> dict:
 
 
 def run() -> list[dict]:
-    base_c = PD.TABLE_VI["cv32e40p_1c"]
     rows = []
     ours = {"caesar_e20": model_caesar(), "carus_e20": model_carus()}
     for cfgname, p in PD.TABLE_VI.items():
@@ -107,7 +106,6 @@ def functional_demo() -> bool:
     vpu = carus.CarusVPU()
     vrf = np.zeros((32, 256), np.int32)
     # v0: activation; weights columns per input: v8+...: W rows packed per k
-    ents = []
     cur = x
     act_reg, tmp_reg = 0, 1
     vrf[act_reg, :len(x) // 4] = alu.pack_np(x)

@@ -41,7 +41,6 @@ def run() -> list[dict]:
 def peak_efficiency_gops_w() -> dict:
     """Carus peak efficiency cross-check (Table VII: 306.7 GOPS/W)."""
     kb = programs.build_matmul(8, p=1024, seed=7)
-    t = timing.carus_cycles(kb.carus, 8)
     e_pj = energy.carus_macro_energy_pj(kb)
     n_ops = 2 * 8 * 8 * 1024          # 1 MAC = 2 ops (paper convention)
     gops_w = n_ops / (e_pj * 1e-12) / 1e9

@@ -84,6 +84,15 @@ def main():
     except nmc.UnsupportedOnEngine as err:
         print(f"  explicit engine='caesar' raises: {err}")
 
+    # every lower() also runs the static verifier (DESIGN.md §11);
+    # corrupt a lowered stream and the checker names the pass, the rule
+    # and the offending instruction (with tracer-op provenance)
+    from repro.nmc import check
+    lk = bus_friendly.lower(x, check="off")
+    lk.program.entries["op"][2] = 63          # smash one opcode
+    diag = check.verify_lowered(lk).errors[0]
+    print(f"  tampered stream  -> {diag}")
+
     print()
     print("=" * 64)
     print("3. Table V matmul (8-bit) through the same traced frontend")
@@ -170,7 +179,7 @@ def main():
           for bk in nmc.BACKENDS}
     dev = "CPU interpret mode" if nmc.resolve_backend("auto") == "scan" \
         else "native kernels"
-    print(f"  matmul8 bit-exact scan == pallas: True")
+    print("  matmul8 bit-exact scan == pallas: True")
     print(f"  dispatch: scan {us['scan']:8.0f} us   pallas "
           f"{us['pallas']:8.0f} us   ({us['scan'] / us['pallas']:.1f}x, "
           f"{dev})")

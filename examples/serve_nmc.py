@@ -14,7 +14,6 @@ Run:  PYTHONPATH=src python examples/serve_nmc.py
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro import nmc
 from repro.configs import base as cb

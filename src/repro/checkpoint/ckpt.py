@@ -122,7 +122,6 @@ class AsyncCheckpointer:
                 self._q.task_done()
 
     def _gc(self):
-        steps = sorted(s for s in (latest_step(self.path),) if s is not None)
         all_steps = sorted(
             int(d.split("_")[1]) for d in os.listdir(self.path)
             if d.startswith("step_") and not d.endswith(".tmp"))

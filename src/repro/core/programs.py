@@ -103,6 +103,10 @@ def _traced_build(kfn, args, engine: str, sew: int, host_cycles: float = 0.0,
     eb = EngineBuild(list(lk.stream), lk.mem, lk.out_slice,
                      host_cycles=host_cycles, ecpu_instrs=lk.ecpu_instrs,
                      post=post)
+    # keep the full lowering (init spans, per-instruction provenance) so
+    # the static verifier sweep (python -m repro.nmc.check) can run the
+    # dataflow passes over registry builds, not just the bare program
+    eb.lowered = lk
     return eb, np.asarray(lk.oracle)
 
 

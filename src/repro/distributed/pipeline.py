@@ -19,7 +19,6 @@ the gradient all-reduce.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -77,7 +76,6 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
             axis)
         return outs
 
-    other_axes = [a for a in mesh.axis_names if a != axis]
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
     out = context.shard_map(
         shard_fn, mesh=mesh,

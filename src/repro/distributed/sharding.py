@@ -18,7 +18,6 @@ sharded, wo/down/out_proj = row sharded, norms replicated, ...).
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

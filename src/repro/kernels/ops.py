@@ -11,7 +11,6 @@ correctness is established separately in ``tests/test_kernels.py`` via
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -63,7 +63,6 @@ def parse_collectives(hlo: str) -> dict:
     use result bytes as the conservative per-device estimate); all-to-all
     and collective-permute ~ result bytes."""
     stats: dict[str, dict] = {}
-    seen_done = set()
     for m in _COLLECTIVE_RE.finditer(hlo):
         tuple_part, dtype, dims, kind = m.groups()
         if "-done(" in m.group(0):

@@ -9,7 +9,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES
 from repro.configs.base import ShapeSpec
 from repro.models import lm
 from repro.models.config import ModelConfig

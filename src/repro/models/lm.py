@@ -19,8 +19,7 @@ Three entry points per family: ``forward`` (teacher-forced training),
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

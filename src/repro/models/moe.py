@@ -19,7 +19,6 @@ standard top-k capacity semantics.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -61,7 +60,6 @@ def _moe_local(x, wr, wi, wg, wo, *, cfg: ModelConfig, axis: Optional[str]):
     t, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     e_loc = wi.shape[0]
-    n_shards = e // e_loc
     cap = max(int(t * k * cfg.capacity_factor / e), 1)
     dtype = x.dtype
 

@@ -57,14 +57,22 @@ from repro.nmc.frontend import (CompiledKernel, LoweredKernel, LoweringError,
                                 NmcValue, ProgramBuilder, TileContext,
                                 UnsupportedOnEngine, jit, kernel, mac,
                                 select_engine)
-from repro.nmc.partition import (PartitionError, PartitionPlan,
+from repro.nmc.partition import (PartitionError, PartitionPlan, slide_halo,
                                  plan as plan_partition)
+from repro.nmc.check import (CHECK_MODES, CheckReport, Diagnostic,
+                             VerificationError, assert_submittable,
+                             assert_wave, verify_lowered, verify_plan,
+                             verify_program, verify_wave)
 
 __all__ = [
     # the one-call frontend (DESIGN.md §7)
     "jit", "kernel", "mac", "CompiledKernel", "LoweredKernel", "NmcValue",
     "ProgramBuilder", "TileContext", "UnsupportedOnEngine", "LoweringError",
     "select_engine",
+    # static verification (DESIGN.md §11)
+    "CHECK_MODES", "CheckReport", "Diagnostic", "VerificationError",
+    "verify_program", "verify_lowered", "verify_plan", "verify_wave",
+    "assert_wave", "assert_submittable", "slide_halo",
     # tile-parallel partitioning planner (DESIGN.md §9)
     "plan_partition", "PartitionPlan", "PartitionError",
     # shared execution runtime

@@ -1,0 +1,6 @@
+"""``python -m repro.nmc.check`` — the static-verification sweep CLI."""
+
+from repro.nmc.check import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

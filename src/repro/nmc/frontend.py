@@ -81,10 +81,19 @@ _CAESAR_SCRATCH_WINDOW = 16        # rotating scratch words per fused group
 class UnsupportedOnEngine(Exception):
     """A traced op cannot be expressed on the requested engine."""
 
-    def __init__(self, op: str, engine: str, reason: str = ""):
+    def __init__(self, op: str, engine: str, reason: str = "",
+                 kernel: Optional[str] = None,
+                 op_index: Optional[int] = None):
         self.op = op
         self.engine = engine
-        msg = f"op '{op}' is not expressible on engine '{engine}'"
+        self.kernel = kernel
+        self.op_index = op_index
+        where = f"op '{op}'"
+        if op_index is not None:
+            where += f" (traced op#{op_index})"
+        if kernel:
+            where += f" in kernel '{kernel}'"
+        msg = f"{where} is not expressible on engine '{engine}'"
         if reason:
             msg = f"{msg}: {reason}"
         super().__init__(msg)
@@ -147,11 +156,17 @@ class ProgramBuilder:
     """Records traced ops; one instance per trace.  Kernel functions see
     it through :class:`TileContext`; lowerings walk ``nodes``/``stores``."""
 
-    def __init__(self, sew: int):
+    def __init__(self, sew: int, name: str = "kernel"):
         assert sew in alu.SEWS, sew
         self.sew = sew
+        self.name = name          # diagnostic provenance (kernel name)
         self.nodes: list[_Node] = []
         self.stores: list[tuple[_Node, int]] = []   # (node, trimmed ne)
+
+    def _where(self) -> str:
+        """Provenance prefix for trace-time diagnostics: the kernel name
+        and the index the op being recorded would get."""
+        return f"{self.name} (traced op#{len(self.nodes)})"
 
     # -- node construction ---------------------------------------------------
     def _new(self, op: str, args: tuple = (), **kw) -> _Node:
@@ -175,7 +190,8 @@ class ProgramBuilder:
             else (b.val if isinstance(b, _Node) else _wrap_scalar(b, self.sew))
         if isinstance(b, _Node) and a.ne != b.ne:
             raise LoweringError(
-                f"operand length mismatch for '{name}': {a.ne} vs {b.ne}")
+                f"{self._where()}: operand length mismatch for "
+                f"'{name}': {a.ne} vs {b.ne}")
         val = alu.trunc_lanes_np(
             alu.lane_binop_np(name, a.val, b_val, self.sew), self.sew)
         return self._new(name, (a, b), val=val, ne=a.ne)
@@ -185,11 +201,13 @@ class ProgramBuilder:
         x, y = a, b
         vecs = [v for v in (x, y) if isinstance(v, _Node)]
         if not vecs:
-            raise LoweringError("mac needs at least one vector operand")
+            raise LoweringError(
+                f"{self._where()}: mac needs at least one vector operand")
         ne = vecs[0].ne
         if any(v.ne != ne for v in vecs) or \
                 (isinstance(acc, _Node) and acc.ne != ne):
-            raise LoweringError("mac operand length mismatch")
+            raise LoweringError(
+                f"{self._where()}: mac operand length mismatch")
         xv = x.val if isinstance(x, _Node) else _scalar_val(x, self.sew)
         yv = y.val if isinstance(y, _Node) else _scalar_val(y, self.sew)
         if acc is None:
@@ -211,8 +229,9 @@ class ProgramBuilder:
         assert 0 < trim <= node.ne, (trim, node.ne)
         if node.op in ("load", "cpool"):
             raise LoweringError(
-                "storing a loaded value directly is not supported — apply "
-                "at least one op (tile memory outputs are compute results)")
+                f"{self.name} (traced op#{node.idx}): storing a loaded "
+                f"value directly is not supported — apply at least one op "
+                f"(tile memory outputs are compute results)")
         self.stores.append((node, trim))
 
     # -- analysis ------------------------------------------------------------
@@ -433,25 +452,28 @@ def engine_diagnosis(builder: ProgramBuilder,
                      engine: str) -> Optional[UnsupportedOnEngine]:
     """Why this tape cannot lower to ``engine`` — or None if it can."""
     lanes = 32 // builder.sew
+    name = getattr(builder, "name", None)
     for n in builder.compute_nodes():
         if engine == "caesar":
             if n.op in BINOPS and not BINOPS[n.op].on_caesar:
                 return UnsupportedOnEngine(
                     n.op, "caesar", "the bus ALU has no such micro-op "
-                    "(Section III-A2); use engine='carus'")
+                    "(Section III-A2); use engine='carus'",
+                    kernel=name, op_index=n.idx)
             if n.op == "slide_down" and n.args[0].op != "load":
                 return UnsupportedOnEngine(
                     "slide_down", "caesar", "NM-Caesar realizes slides as "
                     "host-side shifted data replicas, so only loaded "
                     "values can slide; computed values need NM-Carus's "
-                    "VSLIDEDOWN")
+                    "VSLIDEDOWN", kernel=name, op_index=n.idx)
         else:
             n_words = -(-n.ne // lanes)
             if n.op == "slide_down" and \
                     -(-n_words // C.CARUS_REG_WORDS) > 1:
                 return UnsupportedOnEngine(
                     "slide_down", "carus", "VSLIDEDOWN operates within one "
-                    "vector register; the vector spans multiple registers")
+                    "vector register; the vector spans multiple registers",
+                    kernel=name, op_index=n.idx)
     return None
 
 
@@ -490,6 +512,11 @@ class LoweredKernel:
     used_words: int = 0             # allocator high-water: words the tile
                                     # image actually occupies (drives the
                                     # DMA legs of the multi-tile bus model)
+    kernel: str = ""                # traced kernel name (diagnostics)
+    init_spans: tuple = ()          # image-defined (word_start, n_words)
+                                    # spans — what the static verifier may
+                                    # treat as defined before instr #0
+    prov: Optional[list] = None     # instruction index -> tracer op index
     _prog: Optional[Program] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -588,8 +615,8 @@ class _CaesarLowering:
                     chain_into[n.idx] = c.idx
 
         # -- allocation ------------------------------------------------------
-        b0, b1 = _Cursor(0, _CAESAR_BANK_WORDS), \
-            _Cursor(_CAESAR_BANK_WORDS, _CAESAR_MEM_WORDS)
+        b0, b1 = _Cursor(0, _CAESAR_BANK_WORDS, b.name), \
+            _Cursor(_CAESAR_BANK_WORDS, _CAESAR_MEM_WORDS, b.name)
         region: dict[int, int] = {}            # node idx -> base word addr
         const_addr: dict = {}                  # wrapped int value -> addr
         cpool_base: dict[int, int] = {}        # cpool node idx -> base
@@ -647,6 +674,7 @@ class _CaesarLowering:
         # -- memory image ----------------------------------------------------
         mem = np.zeros(_CAESAR_MEM_WORDS, np.int32)
         dt = alu.NP_DTYPES[self.sew]
+        init_spans: list[tuple[int, int]] = []     # image-defined words
         for n in nodes:
             if n.op in ("load", "slide_down"):
                 # a stored slide's region is its (demand-sized) output
@@ -656,12 +684,15 @@ class _CaesarLowering:
                 padded[:min(n.ne, nw * self.lanes)] = \
                     n.val[:nw * self.lanes].astype(dt)
                 mem[region[n.idx]:region[n.idx] + nw] = alu.pack_np(padded)
+                init_spans.append((region[n.idx], nw))
             elif n.op == "cpool":
                 base = cpool_base[n.idx]
                 for i, v in enumerate(n.val):
                     mem[base + i] = splat_word(int(v), self.sew)
+                init_spans.append((base, int(n.ne)))
         for v, addr in const_addr.items():
             mem[addr] = splat_word(v, self.sew)
+            init_spans.append((addr, 1))
 
         # -- emission --------------------------------------------------------
         def wref(x, w: int) -> int:
@@ -679,6 +710,12 @@ class _CaesarLowering:
             return region[n.idx] + w
 
         stream: list = []
+        prov: list[int] = []                   # instr index -> tracer op idx
+
+        def emit(idx: int, entry) -> None:
+            stream.append(entry)
+            prov.append(idx)
+
         for g in groups:
             gmax = max(demand[n.idx] for n in g)
             for w in range(gmax):
@@ -693,33 +730,34 @@ class _CaesarLowering:
                                 and chain_into.get(acc.idx) == n.idx:
                             if acc_owner != acc.idx:
                                 raise LoweringError(
+                                    f"{b.name} (traced op#{n.idx}): "
                                     "interleaved MAC chains: NM-Caesar has "
                                     "one packed accumulator — keep each "
                                     "mul/mac chain contiguous in the trace")
                             if n.idx in chain_into:
-                                stream.append(caesar_entry(
+                                emit(n.idx, caesar_entry(
                                     CaesarOp.MAC, 0, s1, s2))
                                 acc_owner = n.idx
                             else:
-                                stream.append(caesar_entry(
+                                emit(n.idx, caesar_entry(
                                     CaesarOp.MAC_STORE, wdest(n, w), s1, s2))
                                 acc_owner = None
                         else:               # vector accumulator: mul + add
                             if mac_tmp is None:
                                 mac_tmp = b0.take(1, "mac temporary")
-                            stream.append(caesar_entry(
+                            emit(n.idx, caesar_entry(
                                 CaesarOp.MUL, mac_tmp, s1, s2))
-                            stream.append(caesar_entry(
+                            emit(n.idx, caesar_entry(
                                 CaesarOp.ADD, wdest(n, w), wref(acc, w),
                                 mac_tmp))
                     elif n.op == "mul" and n.idx in chain_into:
                         x, y = n.args
-                        stream.append(caesar_entry(
+                        emit(n.idx, caesar_entry(
                             CaesarOp.MAC_INIT, 0, wref(x, w), wref(y, w)))
                         acc_owner = n.idx
                     else:
                         x, y = n.args
-                        stream.append(caesar_entry(
+                        emit(n.idx, caesar_entry(
                             BINOPS[n.op].caesar_op, wdest(n, w),
                             wref(x, w), wref(y, w)))
 
@@ -727,22 +765,25 @@ class _CaesarLowering:
         used = b0.pos + (b1.pos - _CAESAR_BANK_WORDS)
         return LoweredKernel("caesar", self.sew, stream, mem,
                              (out_base, out_words), post, b.oracle(),
-                             used_words=used)
+                             used_words=used, kernel=b.name,
+                             init_spans=tuple(init_spans), prov=prov)
 
 
 class _Cursor:
     """Bump allocator over one memory bank with capacity diagnostics."""
 
-    def __init__(self, base: int, limit: int):
+    def __init__(self, base: int, limit: int, kernel: str = "kernel"):
         self.base, self.pos, self.limit = base, base, limit
+        self.kernel = kernel
 
     def take(self, n_words: int, what: str) -> int:
         addr = self.pos
         self.pos += n_words
         if self.pos > self.limit:
             raise LoweringError(
-                f"NM-Caesar bank overflow allocating {n_words} words for "
-                f"{what}: {self.pos - self.base}/{self.limit - self.base} "
+                f"{self.kernel}: NM-Caesar bank overflow allocating "
+                f"{n_words} words for {what}: "
+                f"{self.pos - self.base}/{self.limit - self.base} "
                 f"words used")
         return addr
 
@@ -782,8 +823,9 @@ class _CarusLowering:
         stored_first: dict[int, int] = {}
         for si, (node, _t) in enumerate(b.stores):
             if node.idx in stored_first:
-                raise LoweringError("storing one value twice is not "
-                                    "supported on NM-Carus")
+                raise LoweringError(
+                    f"{b.name} (traced op#{node.idx}): storing one value "
+                    f"twice is not supported on NM-Carus")
             stored_first[node.idx] = si
 
         # -- output blocks (contiguous registers, store order) ---------------
@@ -832,15 +874,16 @@ class _CarusLowering:
                 cpool_base[n.idx] = cpool_top
         if reg > cpool_top:
             raise LoweringError(
-                f"NM-Carus register file overflow: {reg} registers of "
-                f"outputs+loads vs {cpool_top} available below the const "
-                f"pools")
-        temp = _RegAlloc(reg, cpool_top)
+                f"{b.name}: NM-Carus register file overflow: {reg} "
+                f"registers of outputs+loads vs {cpool_top} available "
+                f"below the const pools")
+        temp = _RegAlloc(reg, cpool_top, b.name)
 
         # -- image ------------------------------------------------------------
         vrf = np.zeros((C.CARUS_N_VREGS, self.rw), np.int32)
         flat = vrf.reshape(-1)
         dt = alu.NP_DTYPES[self.sew]
+        init_spans: list[tuple[int, int]] = []     # image-defined words
         for n in nodes:
             if n.op in ("load", "cpool"):
                 base = block[n.idx] if n.op == "load" else cpool_base[n.idx]
@@ -849,16 +892,22 @@ class _CarusLowering:
                 padded[:n.ne] = n.val.astype(dt)
                 flat[base * self.rw: base * self.rw + nw] = \
                     alu.pack_np(padded)
+                init_spans.append((base * self.rw, nw))
 
         # -- emission ---------------------------------------------------------
         stream: list = []
+        prov: list[int] = []                   # instr index -> tracer op idx
         remaining = dict(uses)
         cur_vl = None
 
-        def setvl(vl: int):
+        def emit(idx: int, entry) -> None:
+            stream.append(entry)
+            prov.append(idx)
+
+        def setvl(idx: int, vl: int):
             nonlocal cur_vl
             if cur_vl != vl:
-                stream.append(carus_entry(VOp.VSETVL, sval1=vl))
+                emit(idx, carus_entry(VOp.VSETVL, sval1=vl))
                 cur_vl = vl
 
         def consume(*operands):
@@ -880,12 +929,12 @@ class _CarusLowering:
                     temp.free(block[x.idx], self.chunks(x.ne))
                     seen.add(x.idx)
 
-        def scalar_emvx(x) -> int:
+        def scalar_emvx(idx: int, x) -> int:
             """Emit the eCPU tap read for a consts element; returns the
             wrapped scalar value for the following .vx op."""
             if isinstance(x, _ConstScalar):
                 base = cpool_base[x.pool.idx]
-                stream.append(carus_entry(
+                emit(idx, carus_entry(
                     VOp.EMVX, vs2=base + x.index // self.vlmax,
                     sval1=x.index % self.vlmax))
                 return x.value
@@ -901,7 +950,7 @@ class _CarusLowering:
 
         for n in b.compute_nodes():
             nch = self.chunks(n.ne)
-            setvl(self.vl_of(n))
+            setvl(n.idx, self.vl_of(n))
             if n.op == "slide_down":
                 (src,) = n.args
                 src_base = block[src.idx]
@@ -909,7 +958,7 @@ class _CarusLowering:
                 d = dest_for(n, (src,))
                 release_dead((src,), d)
                 block[n.idx] = d
-                stream.append(carus_entry(
+                emit(n.idx, carus_entry(
                     VOp.VSLIDEDOWN, vd=d, vs2=src_base,
                     sval1=n.amount, mode=isa.MODE_VX))
                 continue
@@ -927,7 +976,7 @@ class _CarusLowering:
                     # C matrix): copy it, then accumulate into the copy
                     # (VMACC is in-place)
                     for i in range(nch):
-                        stream.append(carus_entry(
+                        emit(n.idx, carus_entry(
                             VOp.VMV,
                             sval2=isa.pack_indices(d + i, 0, acc_base + i),
                             mode=isa.MODE_VV | isa.MODE_INDIRECT))
@@ -935,15 +984,15 @@ class _CarusLowering:
                 block[n.idx] = d
                 if isinstance(sca, _Node):   # vector-vector mac
                     for i in range(nch):
-                        stream.append(carus_entry(
+                        emit(n.idx, carus_entry(
                             VOp.VMACC,
                             sval2=isa.pack_indices(d + i, block[x.idx] + i,
                                                    block[y.idx] + i),
                             mode=isa.MODE_VV | isa.MODE_INDIRECT))
                 else:
-                    sval = scalar_emvx(sca)
+                    sval = scalar_emvx(n.idx, sca)
                     for i in range(nch):
-                        stream.append(carus_entry(
+                        emit(n.idx, carus_entry(
                             VOp.VMACC, sval1=sval,
                             sval2=isa.pack_indices(d + i,
                                                    block[vec.idx] + i, 0),
@@ -962,7 +1011,7 @@ class _CarusLowering:
                 release_dead((x, y), d)
                 block[n.idx] = d
                 for i in range(nch):
-                    stream.append(carus_entry(
+                    emit(n.idx, carus_entry(
                         spec.carus_vop,
                         sval2=isa.pack_indices(d + i, xb + i, yb + i),
                         mode=isa.MODE_VV | isa.MODE_INDIRECT))
@@ -974,14 +1023,14 @@ class _CarusLowering:
                 block[n.idx] = d
                 if spec.carus_imm and not isinstance(y, _ConstScalar):
                     for i in range(nch):
-                        stream.append(carus_entry(
+                        emit(n.idx, carus_entry(
                             spec.carus_vop, imm=_wrap_scalar(y, self.sew),
                             sval2=isa.pack_indices(d + i, xb + i, 0),
                             mode=isa.MODE_VI | isa.MODE_INDIRECT))
                 else:
-                    sval = scalar_emvx(y)
+                    sval = scalar_emvx(n.idx, y)
                     for i in range(nch):
-                        stream.append(carus_entry(
+                        emit(n.idx, carus_entry(
                             spec.carus_vop, sval1=sval,
                             sval2=isa.pack_indices(d + i, xb + i, 0),
                             mode=isa.MODE_VX | isa.MODE_INDIRECT))
@@ -990,16 +1039,18 @@ class _CarusLowering:
         used = (temp.next + (C.CARUS_N_VREGS - cpool_top)) * self.rw
         return LoweredKernel("carus", self.sew, stream, vrf,
                              (0, out_words), post, b.oracle(),
-                             ecpu_instrs=3, used_words=used)
+                             ecpu_instrs=3, used_words=used, kernel=b.name,
+                             init_spans=tuple(init_spans), prov=prov)
 
 
 class _RegAlloc:
     """Temp vector-register allocator: bump pointer + exact-size free list,
     bounded by the const-pool floor."""
 
-    def __init__(self, start: int, limit: int):
+    def __init__(self, start: int, limit: int, kernel: str = "kernel"):
         self.next = start
         self.limit = limit
+        self.kernel = kernel
         self.free_list: dict[int, list[int]] = {}
 
     def take(self, n_regs: int, what: str) -> int:
@@ -1010,9 +1061,10 @@ class _RegAlloc:
         self.next += n_regs
         if self.next > self.limit:
             raise LoweringError(
-                f"NM-Carus register file overflow allocating {n_regs} "
-                f"registers for {what}: need {self.next}, "
-                f"{self.limit} available (32 minus const pools)")
+                f"{self.kernel}: NM-Carus register file overflow "
+                f"allocating {n_regs} registers for {what}: need "
+                f"{self.next}, {self.limit} available (32 minus const "
+                f"pools)")
         return base
 
     def free(self, base: int, n_regs: int) -> None:
@@ -1057,6 +1109,28 @@ def _check_tiles(tiles) -> int:
     return n
 
 
+def _check_checkmode(check: str) -> str:
+    """Eager check-mode validation (same discipline as
+    :func:`_check_engine`): ``"error"``, ``"warn"`` or ``"off"``."""
+    from repro.nmc.check import CHECK_MODES
+    if check not in CHECK_MODES:
+        raise ValueError(f"unknown check mode {check!r}: expected one of "
+                         f"{CHECK_MODES}")
+    return check
+
+
+def _apply_report(report, mode: str) -> None:
+    """Enforce a :class:`repro.nmc.check.CheckReport` under the kernel's
+    ``check=`` policy: ``"error"`` raises on errors, ``"warn"`` surfaces
+    any finding as a Python warning."""
+    if mode == "error":
+        report.raise_if_errors()
+    elif mode == "warn" and (report.errors or report.warnings):
+        import warnings
+        warnings.warn("static verification: " + report.render(),
+                      stacklevel=3)
+
+
 class CompiledKernel:
     """A traced kernel bound to an engine policy and element width.
 
@@ -1068,12 +1142,14 @@ class CompiledKernel:
 
     def __init__(self, fn: Callable, engine: str = "auto", sew: int = 8,
                  runtime: Optional[NmcRuntime] = None, tiles: int = 1,
-                 partition: str = "auto", backend: str = "auto"):
+                 partition: str = "auto", backend: str = "auto",
+                 check: str = "error"):
         # kwargs validate eagerly: a typo'd engine string or an impossible
         # tile count must fail at decoration time with a named cause, not
         # as a deep-stack assertion at first call
         _check_engine(engine)
         _check_backend(backend)
+        _check_checkmode(check)
         if sew not in alu.SEWS:
             raise ValueError(
                 f"unsupported sew {sew!r}: expected one of "
@@ -1089,6 +1165,7 @@ class CompiledKernel:
         self.tiles = tiles
         self.partition = partition
         self.backend = backend
+        self.check = check
         self._runtime = runtime
         self.__name__ = getattr(fn, "__name__", "kernel")
         self.__doc__ = getattr(fn, "__doc__", None)
@@ -1104,7 +1181,7 @@ class CompiledKernel:
 
     # -- pipeline stages -----------------------------------------------------
     def trace(self, *args, sew: Optional[int] = None) -> ProgramBuilder:
-        builder = ProgramBuilder(sew or self.sew)
+        builder = ProgramBuilder(sew or self.sew, name=self.__name__)
         self.fn(TileContext(builder), *args)
         if not builder.stores:
             raise LoweringError(f"kernel '{self.__name__}' stored no "
@@ -1114,13 +1191,22 @@ class CompiledKernel:
     def select_engine(self, *args, sew: Optional[int] = None) -> str:
         return select_engine(self.trace(*args, sew=sew))
 
+    def _check_mode(self, check: Optional[str]) -> str:
+        return self.check if check is None else _check_checkmode(check)
+
     def lower(self, *args, engine: Optional[str] = None,
-              sew: Optional[int] = None) -> LoweredKernel:
+              sew: Optional[int] = None,
+              check: Optional[str] = None) -> LoweredKernel:
         builder = self.trace(*args, sew=sew)
         eng = _check_engine(engine) if engine is not None else self.engine
         if eng == "auto":
             eng = select_engine(builder)
-        return _LOWERINGS[eng](builder).lower()
+        lk = _LOWERINGS[eng](builder).lower()
+        mode = self._check_mode(check)
+        if mode != "off":
+            from repro.nmc import check as _chk
+            _apply_report(_chk.verify_lowered(lk), mode)
+        return lk
 
     def oracle(self, *args, sew: Optional[int] = None) -> np.ndarray:
         """Pure-numpy reference output (the traced ``alu.*_np`` values)."""
@@ -1136,7 +1222,8 @@ class CompiledKernel:
         return P.plan(self.trace(*args, sew=sew), n, self.partition)
 
     def lower_wave(self, *args, engine: Optional[str] = None,
-                   tiles: Optional[int] = None):
+                   tiles: Optional[int] = None,
+                   check: Optional[str] = None):
         """Lower a partitioned wave: returns ``(plan, lowered_shards)``
         with every shard program NOP-padded to the wave's common
         instruction bucket, so the whole wave lands in **one** bucketed
@@ -1152,6 +1239,13 @@ class CompiledKernel:
         bucket = instr_bucket(max(lk.program.n_instr for lk in lks))
         for lk in lks:
             lk.pad_to(bucket)
+        mode = self._check_mode(check)
+        if mode != "off":
+            # partition safety + per-shard verification, over the *padded*
+            # shard programs — the exact wave the scheduler will dispatch
+            from repro.nmc import check as _chk
+            _apply_report(_chk.verify_wave(pplan.parent, pplan, lks,
+                                           kernel=self.__name__), mode)
         return pplan, lks
 
     # -- execution -----------------------------------------------------------
@@ -1212,7 +1306,8 @@ class CompiledKernel:
 
 def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
         runtime: Optional[NmcRuntime] = None, tiles: int = 1,
-        partition: str = "auto", backend: str = "auto"):
+        partition: str = "auto", backend: str = "auto",
+        check: str = "error"):
     """Compile a traced kernel function into a :class:`CompiledKernel`.
 
     ``engine`` is ``"auto"`` (NM-Caesar when bus-expressible, NM-Carus
@@ -1224,15 +1319,21 @@ def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
     ``"rows"``, ``"axis"``).  ``backend`` picks the executor
     (DESIGN.md §10): ``"scan"`` (reference interpreters), ``"pallas"``
     (fused kernels), or ``"auto"`` (Pallas on TPU/GPU, scan on CPU).
-    All kwargs validate eagerly with ``ValueError``.  Usable as a
-    decorator (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``) or a
-    call."""
+    ``check`` runs the static verifier (:mod:`repro.nmc.check`,
+    DESIGN.md §11) on every lowered program: ``"error"`` (default —
+    raise :class:`repro.nmc.check.VerificationError` on any error-severity
+    diagnostic), ``"warn"`` (surface findings as Python warnings) or
+    ``"off"``.  All kwargs validate eagerly with ``ValueError``.  Usable
+    as a decorator (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``)
+    or a call."""
     if fn is None:
         return lambda f: CompiledKernel(f, engine=engine, sew=sew,
                                         runtime=runtime, tiles=tiles,
-                                        partition=partition, backend=backend)
+                                        partition=partition, backend=backend,
+                                        check=check)
     return CompiledKernel(fn, engine=engine, sew=sew, runtime=runtime,
-                          tiles=tiles, partition=partition, backend=backend)
+                          tiles=tiles, partition=partition, backend=backend,
+                          check=check)
 
 
 def kernel(fn: Optional[Callable] = None, **options):

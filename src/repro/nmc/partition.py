@@ -42,7 +42,7 @@ the caller's array with the same shaping rule the single-tile path uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -79,6 +79,10 @@ class PartitionPlan:
     pieces: List[List[Piece]]          # per shard, in its store order
     store_trims: List[int]             # original store trimmed lengths
     requested_tiles: int
+    parent: Optional[ProgramBuilder] = None   # the unsharded tape — the
+                                       # reference the partition-safety
+                                       # pass (repro.nmc.check) checks
+                                       # store coverage and halos against
 
     @property
     def n_shards(self) -> int:
@@ -132,7 +136,7 @@ def _replay(b: ProgramBuilder, keep: set,
     re-runs the eager oracle evaluation on the sliced values, so the shard's
     oracle is bit-exact with the sliced original by construction, and the
     lowerings see a perfectly ordinary tape (same fusion/placement rules)."""
-    nb = ProgramBuilder(b.sew)
+    nb = ProgramBuilder(b.sew, name=getattr(b, "name", "kernel"))
     m: dict = {}
     for n in b.nodes:
         if n.idx not in keep:
@@ -185,8 +189,8 @@ def _plan_rows(b: ProgramBuilder, tiles: int) -> PartitionPlan:
     S = len(b.stores)
     if S < 2:
         raise PartitionError(
-            f"rows split needs >= 2 stores, tape has {S} — use the "
-            f"element-axis strategy for single-output kernels")
+            f"{b.name}: rows split needs >= 2 stores, tape has {S} — use "
+            f"the element-axis strategy for single-output kernels")
     n = min(tiles, S)
     q, r = divmod(S, n)
     builders, pieces = [], []
@@ -199,14 +203,14 @@ def _plan_rows(b: ProgramBuilder, tiles: int) -> PartitionPlan:
         pieces.append(sel)
         off += count
     return PartitionPlan("rows", b.sew, builders, pieces,
-                         [t for _, t in b.stores], tiles)
+                         [t for _, t in b.stores], tiles, parent=b)
 
 
 # ---------------------------------------------------------------------------
 # "axis" strategy: word-aligned element chunks with slide halo
 # ---------------------------------------------------------------------------
 
-def _slide_halo(b: ProgramBuilder) -> int:
+def slide_halo(b: ProgramBuilder) -> int:
     """Max cumulative ``slide_down`` read-ahead on any path from a load to
     a store — the halo each shard's loads must carry so slid values inside
     the chunk see their true neighbours, not the shard boundary."""
@@ -220,19 +224,23 @@ def _slide_halo(b: ProgramBuilder) -> int:
     return max((halo[n.idx] for n in b.nodes if n.op == "load"), default=0)
 
 
+#: Backwards-compatible private alias (pre-§11 name).
+_slide_halo = slide_halo
+
+
 def _plan_axis(b: ProgramBuilder, tiles: int) -> PartitionPlan:
     vec = [n for n in b.nodes if n.op != "cpool"]
     nes = {n.ne for n in vec}
     if len(nes) != 1:
         raise PartitionError(
-            f"no common data-parallel element axis: vector nodes have "
-            f"lengths {sorted(nes)}")
+            f"{b.name}: no common data-parallel element axis: vector "
+            f"nodes have lengths {sorted(nes)}")
     ne = nes.pop()
     trims = {t for _, t in b.stores}
     if len(trims) != 1:
         raise PartitionError(
-            f"stores disagree on trimmed length ({sorted(trims)}): cannot "
-            f"split one element axis")
+            f"{b.name}: stores disagree on trimmed length "
+            f"({sorted(trims)}): cannot split one element axis")
     L = trims.pop()
     lanes = 32 // b.sew
     # word-aligned chunks: every shard but the last covers a whole number
@@ -240,7 +248,7 @@ def _plan_axis(b: ProgramBuilder, tiles: int) -> PartitionPlan:
     words_total = -(-L // lanes)
     words_per = -(-words_total // tiles)
     chunk = words_per * lanes
-    halo = _slide_halo(b)
+    halo = slide_halo(b)
     builders, pieces = [], []
     lo = 0
     while lo < L:
@@ -253,7 +261,7 @@ def _plan_axis(b: ProgramBuilder, tiles: int) -> PartitionPlan:
         pieces.append([(si, lo, hi) for si in range(len(b.stores))])
         lo = hi
     return PartitionPlan("axis", b.sew, builders, pieces,
-                         [t for _, t in b.stores], tiles)
+                         [t for _, t in b.stores], tiles, parent=b)
 
 
 # ---------------------------------------------------------------------------
@@ -275,11 +283,13 @@ def plan(builder: ProgramBuilder, tiles: int,
                          f"expected one of {STRATEGIES}")
     tiles = _check_tiles(tiles)
     if not builder.stores:
-        raise PartitionError("tape has no stores — nothing to shard")
+        raise PartitionError(f"{builder.name}: tape has no stores — "
+                             f"nothing to shard")
     if tiles == 1:
         pieces = [[(si, 0, t) for si, (_, t) in enumerate(builder.stores)]]
         return PartitionPlan("single", builder.sew, [builder], pieces,
-                             [t for _, t in builder.stores], tiles)
+                             [t for _, t in builder.stores], tiles,
+                             parent=builder)
     if partition == "rows":
         return _plan_rows(builder, tiles)
     if partition == "axis":
@@ -301,5 +311,5 @@ def plan(builder: ProgramBuilder, tiles: int,
             return strat(builder, tiles)
         except PartitionError as e:
             errors.append(str(e))
-    raise PartitionError("no applicable partition strategy: "
-                         + "; ".join(errors))
+    raise PartitionError(f"{builder.name}: no applicable partition "
+                         f"strategy: " + "; ".join(errors))

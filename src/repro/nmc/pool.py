@@ -186,8 +186,13 @@ class BucketedPool(TilePool):
         return p.bucket_key
 
     def _pad_programs(self, programs: list[Program]) -> list[Program]:
+        from repro.nmc.check import assert_wave
         bucket = instr_bucket(max(p.n_instr for p in programs))
-        return [p.pad_to(bucket) for p in programs]
+        padded = [p.pad_to(bucket) for p in programs]
+        # wave-level floor of the static checking contract (DESIGN.md §11):
+        # one shape key across the padded wave, every program submittable
+        assert_wave(padded)
+        return padded
 
     def _pad_tiles(self, n_tiles: int) -> int:
         return tile_bucket(n_tiles)
@@ -296,10 +301,13 @@ class ResidentPool:
             assert self._engine[tile] == prog.engine, \
                 (tile, self._engine[tile], prog.engine)
             by_key.setdefault(prog.bucket_key, []).append((tile, prog))
+        from repro.nmc.check import assert_wave
         for key, group in by_key.items():
             tiles = [t for t, _ in group]
             bucket = key[2]
             progs = [p.pad_to(bucket) for _, p in group]
+            # wave-level floor of the static checking contract (§11)
+            assert_wave(progs)
             tb = tile_bucket(len(tiles))
             states = [self._state[t] for t in tiles]
             states += [states[0]] * (tb - len(tiles))

@@ -104,9 +104,19 @@ class Program:
     # -- construction --------------------------------------------------------
     @classmethod
     def from_entries(cls, engine: str, sew: int, entries) -> "Program":
-        """From a list of PROG_DTYPE scalars (builder / eCPU output)."""
-        arr = (np.asarray(entries, dtype=PROG_DTYPE) if len(entries)
+        """From a list of PROG_DTYPE scalars (builder / eCPU output).
+
+        Caesar entries are normalized structurally zero in the Carus-only
+        fields (``sval1/sval2/imm/mode``): the bus engine never decodes
+        them, so junk there would otherwise ride silently through format
+        round-trips and defeat the bucket/NOP identities the scheduler
+        relies on (and the :mod:`repro.nmc.check` structural pass flags
+        it as an error on hand-built programs)."""
+        arr = (np.array(entries, dtype=PROG_DTYPE) if len(entries)
                else np.zeros(0, dtype=PROG_DTYPE))
+        if engine == "caesar" and len(arr):
+            for f in ("sval1", "sval2", "imm", "mode"):
+                arr[f] = 0
         return cls(engine, sew, arr)
 
     @classmethod

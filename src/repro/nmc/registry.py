@@ -65,6 +65,18 @@ BINOPS: dict[str, OpSpec] = {s.name: s for s in (
 )}
 
 
+def engine_op_ids(engine: str) -> frozenset:
+    """Every opcode id valid in ``engine``'s instruction stream — the
+    single source of truth the static verifier (:mod:`repro.nmc.check`)
+    and the dispatch-time asserts validate the ``op`` field against."""
+    if engine == "caesar":
+        return frozenset(int(o) for o in CaesarOp)
+    if engine == "carus":
+        from repro.core.isa import VOP_COMPACT
+        return frozenset(range(len(VOP_COMPACT)))
+    raise ValueError(f"unknown engine {engine!r}")
+
+
 class NmcRuntime:
     """Shared execution stack for compiled kernels (DESIGN.md §7).
 

@@ -237,6 +237,10 @@ class DispatchQueue:
         the tile's current resident state.  ``backend`` (optional) pins the
         item to an executor ("scan"/"pallas"); waves group per backend at
         launch, default follows the pool."""
+        from repro.nmc.check import assert_submittable
+        # last-line structural floor of the static checking contract
+        # (DESIGN.md §11): full verification belongs at lowering time
+        assert_submittable(program)
         prev = self._last.get(tile)
         if image is not None and self.mode == "inorder" \
                 and prev is not None and not prev.done:

@@ -29,7 +29,7 @@ bucketed jit cache every ``nmc.jit(tiles=N)`` kernel uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,6 @@ memory/compute-mode duality of the paper applied to training state."""
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

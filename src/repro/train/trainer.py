@@ -18,14 +18,14 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.data.pipeline import DataConfig, make_dataset
-from repro.distributed import context, sharding
+from repro.distributed import sharding
 from repro.models.config import ModelConfig
 from repro.optim import adamw
 from repro.train import step as step_lib

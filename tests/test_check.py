@@ -1,0 +1,472 @@
+"""Static verifier tests (DESIGN.md §11): each defect class on a
+hand-corrupted golden program, the check= knob policy, partition-safety
+tampering, the dispatch-time asserts, and the clean-program properties
+(well-formed fuzzed programs and registry-lowered kernels verify ok).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.core.isa import CaesarOp, VOp
+from repro.nmc import check, frontend
+from repro.nmc.check import (CheckReport, Diagnostic, VerificationError,
+                             assert_submittable, assert_wave, verify_lowered,
+                             verify_plan, verify_program, verify_wave)
+from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
+                               instr_bucket)
+
+SEWS = (8, 16, 32)
+CAESAR_WORDS = 8192
+N_REGS = 32
+
+
+def cprog(entries, sew=8):
+    return Program.from_entries("caesar", sew, entries)
+
+
+def kprog(entries, sew=8):
+    return Program.from_entries("carus", sew, entries)
+
+
+def rules(report, rule):
+    return report.by_rule(rule)
+
+
+# ---------------------------------------------------------------------------
+# Golden kernels to corrupt: one real lowered build per engine
+# ---------------------------------------------------------------------------
+
+@frontend.kernel
+def golden(t, x, y):
+    t.store((t.load(x) * 3 + t.load(y)).max(0))
+
+
+def lower_golden(engine, n=64):
+    x = np.arange(n, dtype=np.int64) - n // 2
+    y = np.arange(n, dtype=np.int64)[::-1].copy()
+    return golden.lower(x, y, engine=engine, check="off")
+
+
+# ---------------------------------------------------------------------------
+# Structural pass: Caesar
+# ---------------------------------------------------------------------------
+
+def test_caesar_bad_opcode_flagged_at_instr():
+    lk = lower_golden("caesar")
+    lk.program.entries["op"][3] = 63
+    rep = verify_lowered(lk)
+    d = rules(rep, "bad-opcode")
+    assert d and d[0].severity == "error"
+    assert d[0].pass_name == "structural"
+    assert d[0].instr == 3
+    assert d[0].kernel == "golden"
+    # provenance: the diagnostic carries the tracer op the entry lowered from
+    assert d[0].op_index == lk.prov[3]
+
+
+def test_caesar_oob_address_flagged():
+    lk = lower_golden("caesar")
+    lk.program.entries["src1"][2] = CAESAR_WORDS + 7
+    rep = verify_lowered(lk)
+    d = rules(rep, "oob-address")
+    assert d and d[0].pass_name == "structural" and d[0].instr == 2
+    assert not rep.ok
+
+
+def test_caesar_nonzero_carus_field_flagged():
+    lk = lower_golden("caesar")
+    lk.program.entries["mode"][1] = 2
+    rep = verify_lowered(lk)
+    d = rules(rep, "nonzero-carus-field")
+    assert d and d[0].pass_name == "structural" and d[0].instr == 1
+
+
+def test_caesar_nop_not_neutral_flagged():
+    lk = lower_golden("caesar")
+    n = lk.program.n_instr
+    lk.pad_to(instr_bucket(n + 1))
+    lk.program.entries["src1"][n] = 5          # corrupt a padding NOP
+    rep = verify_lowered(lk)
+    d = rules(rep, "nop-not-neutral")
+    assert d and d[0].pass_name == "structural" and d[0].instr == n
+
+
+def test_from_entries_normalizes_caesar_junk_fields():
+    raw = np.zeros(2, dtype=PROG_DTYPE)
+    raw["op"] = int(CaesarOp.ADD)
+    raw["dest"] = (10, 11)
+    raw["sval1"], raw["imm"], raw["mode"] = 7, -3, 2
+    prog = Program.from_entries("caesar", 8, raw)
+    assert (prog.entries["sval1"] == 0).all()
+    assert (prog.entries["imm"] == 0).all()
+    assert (prog.entries["mode"] == 0).all()
+    assert (raw["sval1"] == 7).all()           # caller's array untouched
+    rep = verify_program(prog, init_spans=((0, 4),))
+    assert not rules(rep, "nonzero-carus-field")
+
+
+# ---------------------------------------------------------------------------
+# Structural pass: Carus
+# ---------------------------------------------------------------------------
+
+def test_carus_bad_opcode_flagged():
+    lk = lower_golden("carus")
+    lk.program.entries["op"][0] = len(isa.VOP_COMPACT) + 3
+    rep = verify_lowered(lk)
+    d = rules(rep, "bad-opcode")
+    assert d and d[0].pass_name == "structural" and d[0].instr == 0
+
+
+def test_carus_bad_mode_flagged():
+    lk = lower_golden("carus")
+    arith = int(isa.COMPACT_ID[VOp.VADD])
+    row = int(np.flatnonzero(lk.program.entries["op"] == arith)[0])
+    lk.program.entries["mode"][row] = 0x40
+    rep = verify_lowered(lk)
+    d = rules(rep, "bad-mode")
+    assert d and d[0].pass_name == "structural" and d[0].instr == row
+
+
+def test_carus_oob_register_direct_flagged():
+    prog = kprog([carus_entry(VOp.VSETVL, sval1=4),
+                  carus_entry(VOp.VADD, vd=N_REGS + 1, vs2=1, vs1=2)])
+    rep = verify_program(prog, init_spans=((256, 8), (512, 8)))
+    d = rules(rep, "oob-register")
+    assert d and d[0].pass_name == "structural" and d[0].instr == 1
+    assert "vd" in d[0].message
+
+
+def test_carus_oob_register_indirect_flagged():
+    e = carus_entry(VOp.VADD, 0, 0, 0,
+                    mode=isa.MODE_INDIRECT | isa.MODE_VV,
+                    sval2=((N_REGS + 1) << 16) | (1 << 8) | 2)
+    prog = kprog([carus_entry(VOp.VSETVL, sval1=4), e])
+    rep = verify_program(prog, init_spans=((256, 8), (512, 8)))
+    d = rules(rep, "oob-register")
+    assert d and d[0].instr == 1 and "vd" in d[0].message
+
+
+def test_carus_vl_clamped_and_empty_warn():
+    vlmax = 256 * (32 // 8)
+    prog = kprog([carus_entry(VOp.VSETVL, sval1=vlmax + 1),
+                  carus_entry(VOp.VSETVL, sval1=0)])
+    rep = verify_program(prog)
+    assert rules(rep, "vl-clamped")[0].instr == 0
+    assert rules(rep, "vl-empty")[0].instr == 1
+    assert rep.ok                       # warnings, not errors
+
+
+def test_carus_nop_not_neutral_flagged():
+    e = np.zeros((), dtype=PROG_DTYPE)
+    e["op"] = isa.COMPACT_ID[VOp.VNOP]
+    e["sval1"] = 3
+    rep = verify_program(kprog([e]))
+    assert rules(rep, "nop-not-neutral")[0].instr == 0
+
+
+# ---------------------------------------------------------------------------
+# Dataflow pass
+# ---------------------------------------------------------------------------
+
+def test_caesar_read_before_write_flagged():
+    lk = lower_golden("caesar")
+    # retarget one op's source at a word no load defines and no op writes
+    lk.program.entries["src1"][0] = CAESAR_WORDS - 1
+    rep = verify_lowered(lk)
+    d = rules(rep, "read-before-write")
+    assert d and d[0].pass_name == "dataflow" and d[0].instr == 0
+    assert str(CAESAR_WORDS - 1) in d[0].message
+
+
+def test_caesar_uncovered_store_flagged():
+    lk = lower_golden("caesar")
+    lo, nw = int(lk.out_slice[0]), int(lk.out_slice[1])
+    # divert the write that covers the last output word
+    row = int(np.flatnonzero(lk.program.entries["dest"] == lo + nw - 1)[-1])
+    lk.program.entries["dest"][row] = lo + nw + 64
+    rep = verify_lowered(lk)
+    d = rules(rep, "uncovered-store")
+    assert d and d[0].pass_name == "dataflow"
+    assert str(lo + nw - 1) in d[0].message
+
+
+def test_caesar_dead_write_warns_with_both_instrs():
+    prog = cprog([caesar_entry(CaesarOp.ADD, 10, 0, 1),
+                  caesar_entry(CaesarOp.ADD, 10, 0, 1)])
+    rep = verify_program(prog, init_spans=((0, 2),), out_slice=(10, 1))
+    d = rules(rep, "dead-write")
+    assert d and d[0].severity == "warning" and d[0].instr == 0
+    assert "instr#1" in d[0].message
+    assert rep.ok and not rep.clean
+
+
+def test_caesar_mac_chain_use_before_init():
+    prog = cprog([caesar_entry(CaesarOp.MAC, 0, 0, 1),
+                  caesar_entry(CaesarOp.MAC_STORE, 10, 0, 1)])
+    rep = verify_program(prog, init_spans=((0, 2),), out_slice=(10, 1))
+    d = rules(rep, "acc-use-before-init")
+    assert [x.instr for x in d] == [0, 1]
+    assert all(x.pass_name == "dataflow" for x in d)
+
+
+def test_caesar_mac_chain_never_stored_warns():
+    prog = cprog([caesar_entry(CaesarOp.MAC_INIT, 0, 0, 1),
+                  caesar_entry(CaesarOp.MAC, 0, 0, 1),
+                  caesar_entry(CaesarOp.ADD, 10, 0, 1)])
+    rep = verify_program(prog, init_spans=((0, 2),), out_slice=(10, 1))
+    assert rules(rep, "dead-accumulator")
+
+
+def test_carus_vmacc_read_before_write_annotated():
+    # VMACC reads its destination in place: an uninitialized vd is flagged
+    # and annotated as the in-place accumulator hazard
+    prog = kprog([carus_entry(VOp.VSETVL, sval1=4),
+                  carus_entry(VOp.VMACC, vd=5, vs2=1, vs1=2)])
+    rep = verify_program(prog, init_spans=((256, 8), (512, 8)))
+    d = rules(rep, "read-before-write")
+    assert any("VMACC" in x.message for x in d)
+    assert any(x.instr == 1 for x in d)
+
+
+def test_golden_kernels_verify_clean():
+    for engine in ("caesar", "carus"):
+        rep = verify_lowered(lower_golden(engine))
+        assert rep.ok, rep.render()
+        assert not rep.warnings, rep.render()
+
+
+# ---------------------------------------------------------------------------
+# Resource pass
+# ---------------------------------------------------------------------------
+
+def test_capacity_overflow_flagged():
+    prog = cprog([caesar_entry(CaesarOp.ADD, 10, 0, 1)])
+    rep = verify_program(prog, init_spans=((0, 2),), out_slice=(10, 1),
+                         used_words=CAESAR_WORDS + 1)
+    d = rules(rep, "capacity")
+    assert d and d[0].pass_name == "resource" and d[0].severity == "error"
+
+
+def test_resource_info_highwater_and_conflicts():
+    # both operands in bank 0 -> one same-bank info record
+    prog = cprog([caesar_entry(CaesarOp.ADD, 4096, 0, 1)])
+    rep = verify_program(prog, init_spans=((0, 2),), out_slice=(4096, 1),
+                         used_words=16)
+    assert rep.clean
+    infos = [d for d in rep.diagnostics if d.severity == "info"]
+    assert any(d.rule == "mem-highwater" for d in infos)
+    assert any(d.rule == "bank-conflicts" for d in infos)
+
+
+# ---------------------------------------------------------------------------
+# Partition safety
+# ---------------------------------------------------------------------------
+
+def slide_kernel():
+    def slide_sum(t, x):
+        a = t.load(x)
+        t.store(a + a.slide_down(2), n=a.ne - 2)
+    return frontend.jit(slide_sum, sew=8, check="off")
+
+
+def test_wave_verifies_clean():
+    k = slide_kernel()
+    x = np.arange(64, dtype=np.int64)
+    plan, lks = k.lower_wave(x, tiles=2)
+    rep = verify_wave(k.trace(x), plan, lks, kernel="slide_sum")
+    assert rep.ok, rep.render()
+
+
+def test_store_not_partitioned_gap_flagged():
+    k = slide_kernel()
+    x = np.arange(64, dtype=np.int64)
+    plan, lks = k.lower_wave(x, tiles=2)
+    si, lo, hi = plan.pieces[0][0]
+    plan.pieces[0][0] = (si, lo + 1, hi)       # open a one-element gap
+    rep = verify_plan(k.trace(x), plan)
+    d = rules(rep, "store-not-partitioned")
+    assert d and d[0].pass_name == "partition"
+
+
+def test_store_not_partitioned_overlap_flagged():
+    k = slide_kernel()
+    x = np.arange(64, dtype=np.int64)
+    plan, lks = k.lower_wave(x, tiles=2)
+    si, lo, hi = plan.pieces[1][0]
+    plan.pieces[1][0] = (si, lo - 1, hi)       # overlap the previous shard
+    rep = verify_plan(k.trace(x), plan)
+    assert any("twice" in d.message
+               for d in rules(rep, "store-not-partitioned"))
+
+
+def test_insufficient_halo_flagged():
+    k = slide_kernel()
+    x = np.arange(64, dtype=np.int64)
+    plan, lks = k.lower_wave(x, tiles=2)
+    for b in plan.builders:                    # shrink every shard load
+        for n in b.nodes:
+            if n.op == "load":
+                n.ne -= 2
+    rep = verify_plan(k.trace(x), plan)
+    d = rules(rep, "insufficient-halo")
+    assert d and d[0].pass_name == "partition"
+
+
+def test_wave_bucket_mismatch_flagged():
+    k = slide_kernel()
+    x = np.arange(64, dtype=np.int64)
+    plan, lks = k.lower_wave(x, tiles=2)
+    lks[1].pad_to(2 * lks[1].program.n_instr)  # split the wave's bucket
+    rep = verify_wave(k.trace(x), plan, lks)
+    assert rules(rep, "wave-bucket-mismatch")
+
+
+# ---------------------------------------------------------------------------
+# check= knob: eager validation + policy
+# ---------------------------------------------------------------------------
+
+def test_check_mode_validates_eagerly():
+    with pytest.raises(ValueError, match="check mode"):
+        frontend.jit(lambda t, x: t.store(t.load(x)), check="bogus")
+
+
+def test_check_mode_default_is_error():
+    assert golden.check == "error"
+
+
+def test_check_error_raises_on_corrupt_program():
+    report = CheckReport("t", [Diagnostic("error", "structural",
+                                          "bad-opcode", "boom")])
+    with pytest.raises(VerificationError) as ei:
+        frontend._apply_report(report, "error")
+    assert ei.value.report is report
+    assert "bad-opcode" in str(ei.value)
+
+
+def test_check_warn_warns_and_off_is_silent():
+    report = CheckReport("t", [Diagnostic("warning", "dataflow",
+                                          "dead-write", "w")])
+    with pytest.warns(UserWarning, match="dead-write"):
+        frontend._apply_report(report, "warn")
+    frontend._apply_report(report, "off")      # no-op
+    frontend._apply_report(report, "error")    # warnings don't raise
+
+
+def test_lower_applies_check_mode():
+    x = np.arange(64, dtype=np.int64)
+    y = x[::-1].copy()
+    for mode in ("error", "warn", "off"):
+        lk = golden.lower(x, y, engine="caesar", check=mode)
+        assert lk.program.n_instr > 0
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-time asserts (pool / runtime hot path)
+# ---------------------------------------------------------------------------
+
+def test_assert_submittable_rejects_bad_opcode():
+    prog = cprog([caesar_entry(CaesarOp.ADD, 10, 0, 1)])
+    prog.entries["op"][0] = 63
+    with pytest.raises(AssertionError, match="id space"):
+        assert_submittable(prog)
+
+
+def test_assert_wave_rejects_mixed_shapes():
+    a = cprog([caesar_entry(CaesarOp.ADD, 10, 0, 1)])
+    b = cprog([caesar_entry(CaesarOp.ADD, 10, 0, 1)] * 2)
+    with pytest.raises(AssertionError, match="shape keys"):
+        assert_wave([a, b])
+    with pytest.raises(AssertionError, match="empty"):
+        assert_wave([])
+    assert_wave([a, a])                        # uniform wave passes
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics plumbing
+# ---------------------------------------------------------------------------
+
+def test_diagnostic_str_includes_provenance():
+    d = Diagnostic("error", "structural", "bad-opcode", "msg",
+                   kernel="k", instr=4, op_index=2)
+    s = str(d)
+    assert "error[structural/bad-opcode]" in s
+    assert "k instr#4 (traced op#2)" in s
+
+
+def test_report_caps_per_rule():
+    # one corrupted stream must not produce thousands of records
+    ents = [caesar_entry(CaesarOp.ADD, 10, CAESAR_WORDS + i, 0)
+            for i in range(check.MAX_PER_RULE + 5)]
+    rep = verify_program(cprog(ents), init_spans=((0, 1),))
+    d = rules(rep, "oob-address")
+    assert len(d) == check.MAX_PER_RULE + 1
+    assert "more" in d[-1].message
+
+
+def test_cli_single_kernel_sweep():
+    assert check.main(["--kernel", "xor", "--sew", "8", "--no-waves"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Properties: well-formed programs verify ok
+# ---------------------------------------------------------------------------
+
+@given(n_instr=st.integers(1, 24), seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_wellformed_caesar_fuzz_verifies_ok(n_instr, seed):
+    """Structurally legal streams with complete MAC/DOT chains over a fully
+    defined image produce no verifier errors (warnings like dead writes are
+    legitimate in random programs)."""
+    rng = np.random.default_rng(seed)
+    binops = [CaesarOp.AND, CaesarOp.OR, CaesarOp.XOR, CaesarOp.ADD,
+              CaesarOp.SUB, CaesarOp.MUL, CaesarOp.MIN, CaesarOp.MAX]
+    entries = []
+    while len(entries) < n_instr:
+        if rng.random() < 0.25:                # a complete MAC chain
+            init, body, store = (CaesarOp.MAC_INIT, CaesarOp.MAC,
+                                 CaesarOp.MAC_STORE)
+            entries.append(caesar_entry(init, 0, *rng.integers(0, 512, 2)))
+            entries.append(caesar_entry(body, 0, *rng.integers(0, 512, 2)))
+            entries.append(caesar_entry(store, int(rng.integers(0, 512)),
+                                        *rng.integers(0, 512, 2)))
+        else:
+            entries.append(caesar_entry(binops[rng.integers(len(binops))],
+                                        *rng.integers(0, 512, 3)))
+    rep = verify_program(cprog(entries), init_spans=((0, 512),),
+                         used_words=512)
+    assert rep.ok, rep.render()
+
+
+@given(n_instr=st.integers(1, 24), seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_wellformed_carus_fuzz_verifies_ok(n_instr, seed):
+    rng = np.random.default_rng(seed)
+    vlmax = 256 * (32 // 8)
+    arith = list(isa.ARITH_OPS)
+    entries = [carus_entry(VOp.VSETVL, sval1=int(rng.integers(1, vlmax + 1)))]
+    for _ in range(n_instr):
+        entries.append(carus_entry(
+            arith[rng.integers(len(arith))],
+            vd=int(rng.integers(N_REGS)), vs2=int(rng.integers(N_REGS)),
+            vs1=int(rng.integers(N_REGS)),
+            mode=int(rng.integers(2))))        # vv / vx, direct
+    rep = verify_program(kprog(entries),
+                         init_spans=((0, N_REGS * 256),))
+    assert rep.ok, rep.render()
+
+
+@pytest.mark.parametrize("sew", SEWS)
+@pytest.mark.parametrize("name", ("xor", "relu", "matmul"))
+def test_registry_lowered_kernels_verify_clean(name, sew):
+    from repro.core import programs as P
+    kb = P.build(name, sew)
+    for engine in ("caesar", "carus"):
+        eb = getattr(kb, engine, None)
+        if eb is None:
+            continue
+        lk = getattr(eb, "lowered", None)
+        rep = (verify_lowered(lk) if lk is not None
+               else verify_program(eb.program))
+        assert rep.ok, rep.render()

@@ -13,7 +13,6 @@ import pytest
 
 from repro.configs import base as cb
 from repro.distributed import sharding
-from repro.launch import specs as S
 from jax.sharding import PartitionSpec as P
 
 

@@ -2,7 +2,6 @@
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs import base as cb
@@ -29,7 +28,7 @@ def test_restart_from_checkpoint_after_injected_failure(tmp_path):
     tc2 = TrainerConfig(total_steps=8, ckpt_every=2, log_every=100,
                         ckpt_dir=str(tmp_path / "ck2"))
     tr2 = Trainer(cfg2, tc2, data_cfg=DataConfig(global_batch=4, seq_len=32))
-    out2 = tr2.run()
+    tr2.run()
     tr2.checkpointer.close()
     a = ckpt.restore(str(tmp_path / "ck"), 8,
                      {"params": tr.init_state()[0], "opt": tr.init_state()[1]})

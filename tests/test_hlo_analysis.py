@@ -1,9 +1,7 @@
 """HLO analyzer: trip-count expansion must recover known FLOP counts."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch import hlo_analysis
 

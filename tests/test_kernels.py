@@ -1,7 +1,6 @@
 """Pallas kernels vs pure-jnp oracles (interpret=True shape/dtype sweeps)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import base as cb
-from repro.models import layers as L
 from repro.models import lm
 from repro.serve.engine import Request, ServeEngine, quantize_params
 

@@ -3,11 +3,9 @@ quantize (the paper's technique) -> serve, plus dry-run/roofline plumbing."""
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs import base as cb
 from repro.data.pipeline import DataConfig
-from repro.models import lm
 from repro.serve.engine import Request, ServeEngine, quantize_params
 from repro.train.trainer import Trainer, TrainerConfig
 

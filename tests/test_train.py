@@ -5,11 +5,10 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint import ckpt
 from repro.configs import base as cb
-from repro.data.pipeline import DataConfig, SyntheticLM, make_dataset
+from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw
 from repro.train import step as step_lib
 from repro.train.trainer import Trainer, TrainerConfig
@@ -93,7 +92,6 @@ def test_packed_file_dataset(tmp_path):
     path = str(tmp_path / "toks.bin")
     toks.tofile(path)
     from repro.data.pipeline import PackedFileDataset
-    cfg = small_cfg()
     ds = PackedFileDataset(path, DataConfig(global_batch=4, seq_len=15))
     b = ds.batch_at(0)
     assert b["tokens"].shape == (4, 15)
