@@ -266,7 +266,41 @@ def sweep_dispatch_cycles(builds: list, mode: str = "serial") -> float:
 # Multi-tile system cost model: one shared bus, N overlapped tiles
 # ---------------------------------------------------------------------------
 
-def wave_cycles(stages: list[StageCost], n_tiles: int,
+def chained_wave_cycles(waves: list[list[StageCost]], n_tiles: int) -> float:
+    """Makespan of a *chain* of dependent partitioned waves on one
+    ``n_tiles`` array — the resident-block serving shape (DESIGN.md §12):
+    wave ``w+1`` consumes wave ``w``'s outputs, so its input DMA cannot
+    start until the previous wave's result slices have drained over the
+    shared system bus (the tile-to-tile activation hop), while the bus and
+    per-tile compute timelines carry over between waves instead of
+    resetting.
+
+    The model is the same N+1-resource system as :func:`wave_cycles`
+    (one serialized 32-bit bus, N independent tile engines); chaining just
+    keeps the timelines hot across waves.  Consequences the tests lock:
+
+    * one wave degenerates to ``wave_cycles(stages, n_tiles)`` exactly;
+    * the chain is never cheaper than its longest wave, and never costs
+      more than running the waves back-to-back with cold timelines
+      (``sum(wave_cycles(w, n) for w in waves)``).
+    """
+    n_tiles = int(n_tiles)
+    assert n_tiles >= 1, n_tiles
+    bus = 0.0                          # shared system-bus timeline
+    tile_free = [0.0] * n_tiles        # per-tile compute timelines
+    for stages in waves:
+        comp_end: list[float] = []
+        for i, s in enumerate(stages):     # images/patches stream in
+            t = i % n_tiles
+            bus += s.dma_in_cycles
+            tile_free[t] = max(bus, tile_free[t]) + s.compute_cycles
+            comp_end.append(tile_free[t])
+        for i, s in enumerate(stages):     # outputs drain: the activation
+            bus = max(bus, comp_end[i]) + s.dma_out_cycles   # hop the next
+    return max(bus, max(tile_free))        # wave's input DMA waits behind
+
+
+def wave_cycles(stages, n_tiles: int,
                 mode: str = "overlapped") -> float:
     """Makespan of one partitioned wave on an ``n_tiles`` tile array.
 
@@ -285,8 +319,14 @@ def wave_cycles(stages: list[StageCost], n_tiles: int,
     reproduces the paper's system-level scaling shape: speedup grows with
     N while per-tile compute dominates and saturates once the serialized
     bus stream binds (adding tiles then only adds queued DMA).
+
+    ``"chained"`` accepts a list of *waves* (each a list of StageCosts)
+    and delegates to :func:`chained_wave_cycles` — the cost of dependent
+    back-to-back waves whose activations hop tile-to-tile over the bus.
     """
-    assert mode in ("serial", "overlapped"), mode
+    assert mode in ("serial", "overlapped", "chained"), mode
+    if mode == "chained":
+        return chained_wave_cycles(stages, n_tiles)
     n_tiles = int(n_tiles)
     assert n_tiles >= 1, n_tiles
     if not stages:

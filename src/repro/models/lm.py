@@ -370,6 +370,35 @@ def init_caches(params, cfg: ModelConfig, batch: int, max_len: int,
     raise ValueError(fam)
 
 
+def cache_batch_axes(cfg: ModelConfig, caches: dict) -> dict:
+    """Explicit batch-axis metadata for a cache pytree from
+    :func:`init_caches`: the same tree structure with an int axis per leaf.
+
+    Per-slot cache writes (e.g. ``repro.serve.engine.ServeEngine``
+    admission) need to know each leaf's batch axis.  Leaves stacked with a
+    leading layer/group axis carry batch at position 1 (position 2 for the
+    hybrid family's mamba states, stacked ``(groups, attn_every, B, ...)``);
+    un-stacked leaves carry it at position 0.  Shape sniffing cannot
+    recover this — a size-1 layer axis is indistinguishable from a size-1
+    batch axis (single-layer configs) — so the family knowledge lives
+    here, next to the ``init_caches`` stacking rules it mirrors."""
+    fam = cfg.family
+
+    def const(tree, ax: int):
+        return jax.tree.map(lambda _: ax, tree)
+
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        # every entry ("layers", "dense_layers", "cross_k/v") is stacked
+        # with one leading layer axis -> batch at 1
+        return {k: const(v, 1) for k, v in caches.items()}
+    if fam == "hybrid":
+        return {"mamba": const(caches["mamba"], 2),
+                "attn": const(caches["attn"], 1)}
+    if fam == "xlstm":                 # per-layer list, batch leading
+        return {"blocks": const(caches["blocks"], 0)}
+    raise ValueError(fam)
+
+
 def decode_step(params, tokens, caches: dict, cache_len, cfg: ModelConfig):
     """One decode step.  tokens: (B, 1) int32 (the *new* token ids);
     cache_len: (B,) lengths INCLUDING the new token.  Returns

@@ -517,6 +517,13 @@ class LoweredKernel:
                                     # spans — what the static verifier may
                                     # treat as defined before instr #0
     prov: Optional[list] = None     # instruction index -> tracer op index
+    cpool_spans: tuple = ()         # (word_start, n_elems) per ``t.consts``
+                                    # pool, trace order — the value-dependent
+                                    # image words.  On NM-Caesar each element
+                                    # owns one splat word, so a resident-
+                                    # weights caller (serve/block.py) can
+                                    # patch exactly these words per call and
+                                    # keep everything else on the tile.
     _prog: Optional[Program] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -763,10 +770,16 @@ class _CaesarLowering:
 
         post = _make_post(spans, self.lanes, dt)
         used = b0.pos + (b1.pos - _CAESAR_BANK_WORDS)
+        # the value-dependent image words, trace order: one splat word per
+        # consts-pool element (the activation taps a resident-weights
+        # caller patches per call — serve/block.py)
+        cspans = tuple((cpool_base[n.idx], int(n.ne))
+                       for n in nodes if n.op == "cpool")
         return LoweredKernel("caesar", self.sew, stream, mem,
                              (out_base, out_words), post, b.oracle(),
                              used_words=used, kernel=b.name,
-                             init_spans=tuple(init_spans), prov=prov)
+                             init_spans=tuple(init_spans), prov=prov,
+                             cpool_spans=cspans)
 
 
 class _Cursor:
@@ -1037,10 +1050,18 @@ class _CarusLowering:
 
         post = _make_post(spans, self.lanes, dt)
         used = (temp.next + (C.CARUS_N_VREGS - cpool_top)) * self.rw
+        # NOTE: on NM-Carus the consts *values* also ride in the instruction
+        # stream (EMVX taps embed sval1), so patching these VRF spans alone
+        # does NOT retarget a resident program — serve/block.py rejects
+        # carus residency for exactly this reason; the spans are recorded
+        # for accounting/introspection symmetry only.
+        cspans = tuple((cpool_base[n.idx] * self.rw, int(n.ne))
+                       for n in nodes if n.op == "cpool")
         return LoweredKernel("carus", self.sew, stream, vrf,
                              (0, out_words), post, b.oracle(),
                              ecpu_instrs=3, used_words=used, kernel=b.name,
-                             init_spans=tuple(init_spans), prov=prov)
+                             init_spans=tuple(init_spans), prov=prov,
+                             cpool_spans=cspans)
 
 
 class _RegAlloc:

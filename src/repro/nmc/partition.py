@@ -88,6 +88,19 @@ class PartitionPlan:
     def n_shards(self) -> int:
         return len(self.builders)
 
+    @property
+    def signature(self) -> tuple:
+        """Layout-stability fingerprint: everything about the plan that
+        determines shard memory layout and gather shape — strategy, SEW,
+        shard count, per-shard piece lists, store trims — and nothing that
+        depends on traced *values*.  Two plans of one kernel over different
+        activation values must agree on it for resident-weight patching to
+        be sound (:mod:`repro.serve.block` asserts this at build time and
+        falls back to a full reload on mismatch)."""
+        return (self.strategy, self.sew, self.n_shards,
+                tuple(tuple(p) for p in self.pieces),
+                tuple(self.store_trims))
+
     def shard_oracles(self) -> List[np.ndarray]:
         """Each shard's traced reference output (eager numpy evaluation)."""
         return [b.oracle() for b in self.builders]

@@ -237,6 +237,9 @@ class ResidentPool:
         self.dispatches = 0
         self.programs_run = 0
         self.bytes_moved = 0
+        self.patches = 0             # partial memory-mode writes (word spans)
+        self.patch_bytes = 0         # bytes moved by patches (also counted
+                                     # in bytes_moved)
 
     @property
     def compiles(self) -> int:
@@ -264,6 +267,32 @@ class ResidentPool:
         self._state[tile] = state
         self.loads += 1
         self.bytes_moved += int(state.size) * WORD_BYTES
+
+    def patch(self, tile, updates: list[tuple[int, np.ndarray]]) -> None:
+        """Memory-mode *partial* write: apply ``(word_start, words)`` spans
+        onto the tile's resident state without re-uploading the full image.
+
+        This is the steady-state serving path (DESIGN.md §12): weights stay
+        resident across calls, only the per-call activation words cross the
+        bus.  Accounted under dedicated counters (``patches`` /
+        ``patch_bytes``, also rolled into ``bytes_moved``) and *not* under
+        ``loads`` — so residency proofs can assert weights DMA'd onto the
+        tile once while activations streamed per call."""
+        assert tile in self._state, \
+            f"patch of tile {tile!r} with no resident state — load first"
+        state = self._state[tile]
+        flat = state.reshape(-1)
+        nw = 0
+        for lo, words in updates:
+            w = jnp.asarray(np.asarray(words, np.int32).reshape(-1))
+            assert int(lo) >= 0 and int(lo) + w.size <= flat.size, \
+                (tile, lo, int(w.size), int(flat.size))
+            flat = flat.at[int(lo):int(lo) + w.size].set(w)
+            nw += int(w.size)
+        self._state[tile] = flat.reshape(state.shape)
+        self.patches += 1
+        self.patch_bytes += nw * WORD_BYTES
+        self.bytes_moved += nw * WORD_BYTES
 
     def store(self, tile, out_slice: tuple[int, int], sew: int) -> np.ndarray:
         """Memory-mode read: resident output words -> host elements."""

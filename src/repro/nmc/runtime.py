@@ -187,6 +187,10 @@ class _WorkItem:
     future: NMCFuture
     prev: Optional[NMCFuture]       # preceding future on this tile, if any
     backend: Optional[str] = None   # executor override for this item's wave
+    patch: object = None            # (word_start, words) spans applied onto
+                                    # the resident state at launch — the
+                                    # steady-state serving path (weights
+                                    # resident, activations patched per call)
 
 
 class DispatchQueue:
@@ -224,7 +228,8 @@ class DispatchQueue:
     def submit(self, tile, program: Program, image=None,
                out_slice: Optional[tuple[int, int]] = None,
                post: Optional[Callable] = None,
-               backend: Optional[str] = None) -> NMCFuture:
+               backend: Optional[str] = None,
+               patch: Optional[list] = None) -> NMCFuture:
         """Queue one work item; returns its future immediately.
 
         ``image`` (optional) is the host image to stage into the tile's
@@ -236,7 +241,13 @@ class DispatchQueue:
         compute either way).  Without an image the program chains against
         the tile's current resident state.  ``backend`` (optional) pins the
         item to an executor ("scan"/"pallas"); waves group per backend at
-        launch, default follows the pool."""
+        launch, default follows the pool.
+
+        ``patch`` (optional) is a list of ``(word_start, words)`` spans
+        applied onto the tile's resident state when the item launches
+        (after any image install): the steady-state resident-serving path —
+        weights stay on the tile, only the per-call activation words move
+        (``ResidentPool.patch`` accounting)."""
         from repro.nmc.check import assert_submittable
         # last-line structural floor of the static checking contract
         # (DESIGN.md §11): full verification belongs at lowering time
@@ -247,7 +258,7 @@ class DispatchQueue:
             prev.state()            # serial DMA: wait before staging
         fut = NMCFuture(self, tile, program, out_slice, post)
         item = _WorkItem(tile, program, image, None, program.engine, fut,
-                         prev, backend)
+                         prev, backend, patch)
         # depth-2 double buffering: at most one staged shadow buffer per
         # tile ahead of the resident (possibly computing) state
         if image is not None and not self._staged_pending.get(tile):
@@ -298,6 +309,10 @@ class DispatchQueue:
             if it.staged is not None:
                 self.pool.install(it.tile, it.engine, it.staged)
                 self._staged_pending[it.tile] -= 1
+            if it.patch is not None:
+                # partial memory-mode write on top of the resident state
+                # (after any install, so patch words win over image words)
+                self.pool.patch(it.tile, it.patch)
         by_backend: dict = {}
         for it in wave:
             by_backend.setdefault(it.backend, []).append(it)

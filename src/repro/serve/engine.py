@@ -73,11 +73,20 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  nmc_queue: Optional[DispatchQueue] = None,
-                 nmc_tiles: int = 1):
+                 nmc_tiles: int = 1,
+                 max_prefills: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        # admission control: at most this many prefills launch per step
+        # (None = one per free slot), so at serving scale prefill waves
+        # interleave with decode waves instead of stalling every active
+        # slot behind a burst of arrivals
+        if max_prefills is not None and max_prefills < 1:
+            raise ValueError(
+                f"max_prefills must be >= 1 or None, got {max_prefills!r}")
+        self.max_prefills = max_prefills
         self.nmc_queue = nmc_queue if nmc_queue is not None \
             else nmc.default_runtime().queue
         # W8A8 projections offloaded to the NMC tile array shard across
@@ -89,11 +98,15 @@ class ServeEngine:
         if self.nmc_tiles < 1:
             raise ValueError(f"nmc_tiles must be >= 1, got {nmc_tiles!r}")
         self._nmc_rt = nmc.NmcRuntime.for_queue(self.nmc_queue)
-        self._nmc_proj: dict = {}       # (m, k) -> CompiledKernel
+        self._nmc_proj: dict = {}       # (m, k, n, sew) -> CompiledKernel
         self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
         self.prefill = jax.jit(make_prefill_step(cfg, max_len))
         self.caches = lm.init_caches(params, cfg, n_slots, max_len,
                                      dtype=cfg.dtype)
+        # explicit per-leaf batch axes from the family that built the
+        # cache — slot writes must not sniff axes from leaf shapes (a
+        # size-1 layer axis is indistinguishable from a size-1 batch axis)
+        self._cache_axes = lm.cache_batch_axes(cfg, self.caches)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_len = np.zeros(n_slots, np.int32)
         self.slot_remaining = np.zeros(n_slots, np.int32)
@@ -102,14 +115,18 @@ class ServeEngine:
         self.done: list[Request] = []
 
     # -- NMC tile-array offload ----------------------------------------------
-    def nmc_project(self, x8, w8) -> np.ndarray:
+    def nmc_project(self, x8, w8, sew: int = 8) -> np.ndarray:
         """One W8A8 projection ``y = x8 @ w8`` executed on the NMC tile
         array, sharded across ``nmc_tiles`` tiles by the partitioning
         planner (DESIGN.md §9): activation entries are scalar taps, weight
-        rows are resident vectors, output rows distribute across the array
-        and the gather reassembles ``(m, n)`` — bit-exact int8 wrap-at-8
-        semantics (two's complement), matching the quantized kernels the
-        Table V matmul models.
+        rows are resident vectors, and the ``"axis"`` strategy gives each
+        tile a contiguous column slice of every weight row (the same
+        layout the resident-block path keeps on-array), the gather
+        reassembling ``(m, n)``.  At the default ``sew=8``
+        the result carries bit-exact int8 wrap-at-8 semantics (two's
+        complement), matching the quantized kernels the Table V matmul
+        models; ``sew=32`` widens the int8 operands into 32-bit lanes for
+        exact int32 accumulation (the resident-block serving contract).
 
         This is the serving-level hook onto the paper's hardware path: the
         jitted bf16/int8 JAX decode loop stands in for the host CPU, and
@@ -123,7 +140,12 @@ class ServeEngine:
         w8 = np.asarray(w8, np.int8)
         m, k = x8.shape
         assert w8.shape[0] == k, (x8.shape, w8.shape)
-        kern = self._nmc_proj.get((m, k))
+        n = int(w8.shape[1])
+        # keyed on the full shape (m, k, n) plus sew: two weights with the
+        # same (m, k) but different output widths n must not share a cache
+        # entry, and sew=32 callers (exact int32 accumulation for the
+        # resident-block comparison path) must not collide with sew=8
+        kern = self._nmc_proj.get((m, k, n, sew))
         if kern is None:
             def proj(t, X, W):
                 a = t.consts(X)
@@ -133,10 +155,43 @@ class ServeEngine:
                     for kk in range(k):
                         acc = nmc.mac(acc, a[i, kk], rows[kk])
                     t.store(acc)
-            kern = nmc.jit(proj, sew=8, tiles=self.nmc_tiles,
-                           runtime=self._nmc_rt)
-            self._nmc_proj[(m, k)] = kern
-        return np.asarray(kern(x8, w8)).reshape(m, w8.shape[1])
+            # "axis" column-shards the weight loads (each tile holds its
+            # slice of W, cpool replicated) — the layout wide projections
+            # need to fit a tile's bank, and the one ResidentProjection
+            # keeps on-array
+            kern = nmc.jit(proj, sew=sew, tiles=self.nmc_tiles,
+                           partition="axis", runtime=self._nmc_rt)
+            self._nmc_proj[(m, k, n, sew)] = kern
+        if sew == 8:
+            return np.asarray(kern(x8, w8)).reshape(m, n)
+        # widen int8 operands into sew-bit lanes: accumulation is exact
+        # (k * 127^2 < 2^31 for any tile-resident k), true W8A8 GEMM
+        return np.asarray(kern(x8.astype(np.int32),
+                               w8.astype(np.int32))).reshape(m, n)
+
+    def resident_block(self, layer: int = 0, rows: Optional[int] = None,
+                       tiles: Optional[int] = None):
+        """Build a :class:`repro.serve.block.ResidentBlock` over one decoder
+        layer's weights: the whole W8A8 block (q/k/v/o projections + MLP)
+        runs as chained partitioned waves on the tile array with the
+        quantized weights resident — loaded once, reused every token; only
+        activation words cross the bus per call (DESIGN.md §12).
+
+        ``rows`` is the per-call token-row count (defaults to this engine's
+        slot count); ``tiles`` the per-projection shard width (defaults to
+        ``nmc_tiles``).  Dispatches through this engine's queue, so block
+        waves and serving traffic share one discipline."""
+        from repro.serve.block import ResidentBlock
+        if self.cfg.family not in ("dense", "vlm"):
+            raise ValueError(
+                f"resident_block supports stacked dense decoder layers, "
+                f"not family {self.cfg.family!r}")
+        lp = jax.tree.map(lambda a: np.asarray(a[layer]),
+                          self.params["layers"])
+        return ResidentBlock(self.cfg, lp, queue=self.nmc_queue,
+                             rows=rows if rows is not None else self.n_slots,
+                             tiles=tiles if tiles is not None
+                             else self.nmc_tiles)
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
@@ -151,6 +206,9 @@ class ServeEngine:
         # at a time (prefills are independent); only the overlap differs.
         launches = []
         for s in range(self.n_slots):
+            if self.max_prefills is not None \
+                    and len(launches) >= self.max_prefills:
+                break
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 fut = self.nmc_queue.submit_call(
@@ -161,16 +219,24 @@ class ServeEngine:
             # .value, not .result(): the arrays are their own futures — the
             # argmax below forces logits while the cache merge stays queued
             logits, caches1 = fut.value
-            # copy the single-sequence cache into slot s
+            # copy the single-sequence cache into slot s, on the batch axis
+            # the cache family declares for each leaf (never sniffed from
+            # leaf shapes)
             self.caches = jax.tree.map(
-                lambda full, one: _insert_slot(full, one, s),
-                self.caches, caches1)
+                lambda full, one, ax: _insert_slot(full, one, s, ax),
+                self.caches, caches1, self._cache_axes)
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
             self.slot_req[s] = req
             self.slot_len[s] = len(req.prompt) + 1
             self.slot_remaining[s] = req.max_new - 1
             self.slot_last_tok[s] = tok
+            # prefill itself produced one token; a request exhausted by it
+            # (max_new=1, or the prompt already fills max_len) retires here
+            # instead of riding a decode step that would emit an extra token
+            if self.slot_remaining[s] <= 0 or self.slot_len[s] >= self.max_len:
+                self.done.append(req)
+                self.slot_req[s] = None
 
     # -- decode loop ----------------------------------------------------------
     def step(self):
@@ -206,11 +272,10 @@ class ServeEngine:
         return self.done
 
 
-def _insert_slot(full, one, s: int):
-    """Write a batch-1 cache entry into slot s of the batched cache.  Works
-    for any leaf with the batch dim in position 1 (layer-stacked) or 0."""
-    if one.ndim >= 2 and one.shape[0] != 1 and one.shape[1] == 1:
-        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
-                                                   s, axis=1)
+def _insert_slot(full, one, s: int, axis: int):
+    """Write a batch-1 cache entry into slot s of the batched cache along
+    the explicit ``axis`` declared by :func:`repro.models.lm.cache_batch_axes`
+    (shape sniffing misreads single-layer stacks, whose layer dim of 1 is
+    indistinguishable from a batch dim of 1)."""
     return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
-                                               s, axis=0)
+                                               s, axis=axis)

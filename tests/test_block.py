@@ -1,0 +1,175 @@
+"""Resident W8A8 transformer-block serving (PR 8, DESIGN.md §12).
+
+Covers the tentpole contract: a decoder block's quantized weights DMA onto
+the tile array once (ResidentPool ``loads``), every subsequent token step
+patches only activation words (``patches``/``patch_bytes``), and the
+resident path is bit-exact against both the per-projection
+``ServeEngine.nmc_project`` path and the pure-JAX int32 matmul reference.
+"""
+
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro import nmc  # noqa: E402
+from repro.configs import base as cb  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.nmc import frontend  # noqa: E402
+from repro.serve.block import (  # noqa: E402
+    ResidentProjection,
+    quantize_rows,
+    splat_words,
+)
+from repro.serve.engine import ServeEngine, quantize_params  # noqa: E402
+
+
+def _own_queue():
+    """Private queue over a private ResidentPool (isolated residency
+    counters) sharing the process-wide bucketed jit cache."""
+    return nmc.DispatchQueue(pool=nmc.ResidentPool(
+        pool=nmc.default_runtime().bucketed))
+
+
+def _tiny_cfg():
+    return cb.get("qwen1.5-0.5b", smoke=True).scaled(
+        d_model=16, n_heads=2, n_kv_heads=2, d_ff=32, nmc_mode="w8a8")
+
+
+def _tiny_engine(queue, n_slots=4, tiles=2):
+    cfg = _tiny_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, cfg)
+    return ServeEngine(cfg, qparams, n_slots=n_slots, max_len=32,
+                       nmc_queue=queue, nmc_tiles=tiles)
+
+
+# ---------------------------------------------------------------------------
+# splat_words: the patch payload must be exactly what lowering would write
+# ---------------------------------------------------------------------------
+
+def test_splat_words_matches_frontend_splat_word():
+    rng = np.random.default_rng(0)
+    for sew in (8, 16, 32):
+        lo, hi = -(1 << (sew - 1)), (1 << (sew - 1))
+        vals = rng.integers(lo, hi, 64, dtype=np.int64).astype(np.int32)
+        got = splat_words(vals, sew)
+        want = np.array([frontend.splat_word(int(v), sew) for v in vals],
+                        np.int32)
+        assert np.array_equal(got, want), sew
+
+
+def test_quantize_rows_roundtrip_bounds():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(5, 24)).astype(np.float32) * 3.0
+    q, s = quantize_rows(x)
+    assert q.dtype == np.int8 and np.abs(q.astype(np.int32)).max() <= 127
+    err = np.abs(q.astype(np.float32) * s[:, None] - x)
+    assert err.max() <= 0.5 * s.max() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# ResidentProjection: bit-exactness + residency counters
+# ---------------------------------------------------------------------------
+
+def test_resident_projection_bit_exact_and_resident():
+    own = _own_queue()
+    rng = np.random.default_rng(2)
+    w8 = rng.integers(-128, 128, (8, 12), dtype=np.int8)
+    rp = ResidentProjection("p", w8, own, rows=3, tiles=2)
+    assert rp.static, "value-independence proof must hold for the proj kernel"
+    assert rp.n_shards == 2
+    loads_after_first = None
+    for it in range(3):
+        x8 = rng.integers(-128, 128, (3, 8), dtype=np.int8)
+        y = rp(x8)
+        assert np.array_equal(
+            y, x8.astype(np.int64) @ w8.astype(np.int64)), it
+        if it == 0:
+            loads_after_first = own.pool.loads
+            assert loads_after_first == rp.n_shards
+    # weights crossed the bus exactly once per shard — later calls are
+    # patch-only
+    assert own.pool.loads == loads_after_first
+    assert own.pool.patches == 3 * rp.n_shards
+    assert own.pool.patch_bytes == 3 * rp.patch_bytes_per_call
+
+
+def test_resident_projection_rejects_carus():
+    w8 = np.zeros((4, 4), np.int8)
+    with pytest.raises(nmc.LoweringError):
+        ResidentProjection("p", w8, _own_queue(), rows=2, tiles=1,
+                           engine="carus")
+
+
+# ---------------------------------------------------------------------------
+# ResidentBlock: three-way bit-exactness over chained steps
+# ---------------------------------------------------------------------------
+
+def test_resident_block_three_way_bit_exact():
+    own = _own_queue()
+    eng = _tiny_engine(own, n_slots=4, tiles=2)
+    blk = eng.resident_block(layer=0, tiles=2)
+    assert blk.static
+    assert blk.n_shards == 14          # 7 projections x 2 shards
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, eng.cfg.d_model)).astype(np.float32)
+    x_res, x_prj, x_jax = x.copy(), x.copy(), x.copy()
+    st_res, st_prj, st_jax = (blk.init_state(8) for _ in range(3))
+    for _ in range(3):
+        x_res, st_res = blk.step(x_res, st_res, mm=None)
+        x_prj, st_prj = blk.step(x_prj, st_prj, mm=blk.project_mm(eng))
+        x_jax, st_jax = blk.step(x_jax, st_jax, mm=blk.jax_mm)
+        # int32 GEMMs are exact at SEW 32 and every host stage is shared,
+        # so the three backends agree to the bit — not approximately
+        assert np.array_equal(x_res, x_jax)
+        assert np.array_equal(x_prj, x_jax)
+        assert np.array_equal(st_res["k"], st_jax["k"])
+    assert st_res["len"] == 3
+
+
+def test_resident_block_weights_dma_once():
+    own = _own_queue()
+    eng = _tiny_engine(own, n_slots=4, tiles=2)
+    blk = eng.resident_block(layer=0, tiles=2)
+    rng = np.random.default_rng(4)
+    st = blk.init_state(8)
+    x = rng.normal(size=(4, eng.cfg.d_model)).astype(np.float32)
+    x, st = blk.step(x, st)            # cold: ships every weight image
+    loads0 = own.pool.loads
+    assert loads0 == blk.n_shards
+    pb0 = own.pool.patch_bytes
+    for _ in range(2):                 # steady: activation patches only
+        x, st = blk.step(x, st)
+    assert own.pool.loads == loads0
+    assert own.pool.patches == 3 * blk.n_shards
+    assert own.pool.patch_bytes - pb0 == 2 * blk.patch_bytes_per_call
+
+
+def test_resident_block_steady_cheaper_than_cold():
+    own = _own_queue()
+    eng = _tiny_engine(own, tiles=2)
+    blk = eng.resident_block(layer=0, tiles=2)
+    steady = blk.step_cycles(steady=True)
+    cold = blk.step_cycles(steady=False)
+    assert steady < cold
+    # steady saves exactly on the input DMA leg; compute and output legs
+    # are identical per stage
+    for ws, wc in zip(blk.step_waves(True), blk.step_waves(False)):
+        for s, c in zip(ws, wc):
+            assert s.compute_cycles == c.compute_cycles
+            assert s.dma_out_cycles == c.dma_out_cycles
+            assert s.dma_in_cycles <= c.dma_in_cycles
+
+
+def test_resident_block_rejects_non_dense_family():
+    cfg = cb.get("moonshot-v1-16b-a3b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.resident_block()

@@ -156,3 +156,166 @@ def test_moe_expert_quantization():
     lg2, _ = lm.decode_step(qp, jnp.argmax(lg, -1)[:, None].astype(jnp.int32),
                             caches, jnp.full((2,), 17, jnp.int32), qcfg)
     assert np.isfinite(np.asarray(lg2)).all()
+
+
+def test_nmc_project_cache_keyed_on_full_shape():
+    """Regression (PR 8): the projection kernel cache was keyed on (m, k)
+    only — two weights with the same activation shape but different output
+    widths n must not share a cache entry, and sew=32 exact-accumulation
+    callers must not collide with the default wrap-at-8 path."""
+    cfg = cb.get("qwen1.5-0.5b", smoke=True).scaled(nmc_mode="w8a8")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, cfg)
+    eng = ServeEngine(cfg, qparams, n_slots=1, max_len=32, nmc_tiles=2)
+    rng = np.random.default_rng(11)
+    x8 = rng.integers(-128, 128, (4, 4), dtype=np.int8)
+    w_wide = rng.integers(-128, 128, (4, 24), dtype=np.int8)
+    w_narrow = rng.integers(-128, 128, (4, 8), dtype=np.int8)
+    y_wide = eng.nmc_project(x8, w_wide)
+    y_narrow = eng.nmc_project(x8, w_narrow)       # same (m, k), new n
+    assert y_wide.shape == (4, 24) and y_narrow.shape == (4, 8)
+    assert (y_wide ==
+            (x8.astype(np.int64) @ w_wide.astype(np.int64))
+            .astype(np.int8)).all()
+    assert (y_narrow ==
+            (x8.astype(np.int64) @ w_narrow.astype(np.int64))
+            .astype(np.int8)).all()
+    assert (4, 4, 24, 8) in eng._nmc_proj and (4, 4, 8, 8) in eng._nmc_proj
+    # sew=32: exact int32 accumulation (true W8A8 GEMM), own cache entry
+    y32 = eng.nmc_project(x8, w_wide, sew=32)
+    assert (y32 == x8.astype(np.int64) @ w_wide.astype(np.int64)).all()
+    assert (4, 4, 24, 32) in eng._nmc_proj
+
+
+def test_max_new_exact_token_counts():
+    """Regression (PR 8): a max_new=1 request used to ride one decode step
+    after its prefill and emit two tokens — exhausted slots must retire at
+    admission time."""
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    for max_new in (1, 2, 16):
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=128)
+        eng.submit(Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+            max_new=max_new))
+        done = eng.run()
+        assert len(done) == 1
+        assert len(done[0].out) == max_new, (max_new, done[0].out)
+
+
+def test_single_layer_cache_slot_insert():
+    """Regression (PR 8): slot insertion sniffed the batch axis from leaf
+    shapes, which misreads a single-layer stack (layer dim of 1 looks like
+    a batch dim of 1) — axes now come from lm.cache_batch_axes."""
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32,
+                                                       n_layers=1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 7)]
+    eng = ServeEngine(cfg, params, n_slots=3, max_len=64)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=pr, max_new=4))
+    done = eng.run()
+    assert len(done) == 3
+    for req in done:
+        ref = _greedy_reference(cfg, params, req.prompt, 4)
+        assert req.out == ref, (req.rid, req.out, ref)
+
+
+def test_continuous_batching_invariants():
+    """PR 8 coverage: FIFO admission order, slot reuse after retirement,
+    and run() draining both the request queue and every slot."""
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    for i in range(3):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+            max_new=2))
+    done = eng.run()
+    # one slot served all three requests (reused after each retirement),
+    # completing in submission order
+    assert [r.rid for r in done] == [0, 1, 2]
+    assert all(len(r.out) == 2 for r in done)
+    # run() drains: no queued requests, no occupied slots
+    assert not eng.queue and not any(eng.slot_req)
+
+
+def test_max_len_truncates_generation():
+    """PR 8 coverage: a slot retires when its sequence hits max_len, so a
+    request can emit at most max_len - len(prompt) tokens."""
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=8)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=16))
+    done = eng.run()
+    assert len(done) == 1
+    assert len(done[0].out) == 8 - len(prompt)
+
+
+def test_max_prefills_bounds_admission():
+    """PR 8: admission control — at most max_prefills prefills launch per
+    step even with more free slots and queued requests."""
+    import pytest
+    cfg = cb.get("h2o-danube-1.8b", smoke=True).scaled(dtype=jnp.float32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64, max_prefills=1)
+    for i in range(4):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+            max_new=3))
+    eng._admit()
+    assert sum(r is not None for r in eng.slot_req) == 1
+    assert len(eng.queue) == 3
+    # the bound is per step, not global: everything still completes, in
+    # FIFO order, bit-identical to unbounded admission
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    eng_ref = ServeEngine(cfg, params, n_slots=4, max_len=64)
+    for i, req in enumerate(sorted(done, key=lambda r: r.rid)):
+        eng_ref.submit(Request(rid=i, prompt=req.prompt, max_new=3))
+    ref = eng_ref.run()
+    for a, b in zip(sorted(done, key=lambda r: r.rid),
+                    sorted(ref, key=lambda r: r.rid)):
+        assert a.out == b.out
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, n_slots=1, max_len=32, max_prefills=0)
+
+
+def test_dispatch_queue_counters_mixed_traffic():
+    """PR 8 coverage: DispatchQueue counter invariants under mixed
+    submit (tile programs) and submit_call (generic device work) traffic
+    through one private queue."""
+    from repro import nmc
+    cfg = cb.get("qwen1.5-0.5b", smoke=True).scaled(nmc_mode="w8a8")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, cfg)
+    own = nmc.DispatchQueue(pool=nmc.ResidentPool(
+        pool=nmc.default_runtime().bucketed))
+    eng = ServeEngine(cfg, qparams, n_slots=2, max_len=32,
+                      nmc_queue=own, nmc_tiles=2)
+    rng = np.random.default_rng(9)
+    x8 = rng.integers(-128, 128, (3, 4), dtype=np.int8)
+    w8 = rng.integers(-128, 128, (4, 16), dtype=np.int8)
+    y = eng.nmc_project(x8, w8)                     # 2-shard tile wave
+    assert (y == (x8.astype(np.int64) @ w8.astype(np.int64))
+            .astype(np.int8)).all()
+    eng.submit(Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+        max_new=3))
+    eng.run()                                       # submit_call traffic
+    own.drain()
+    # lifecycle conservation: everything submitted launched and resolved
+    assert own.submitted == own.launched == own.resolved == 2
+    assert own.waves >= 1
+    # generic device work is counted separately: 1 prefill + decode steps
+    assert own.calls >= 3
+    # a second projection through the same queue keeps the books balanced
+    eng.nmc_project(x8, w8)
+    assert own.submitted == own.launched == own.resolved == 4

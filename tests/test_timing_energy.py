@@ -64,3 +64,49 @@ def test_peak_throughput_identities():
     # Caesar: one word-wise DOT (4 MACs) per 2 cycles = 2 MAC/cyc = 4 ops/cyc
     assert C.CAESAR_PEAK_GOPS == pytest.approx(
         4 * C.F_CLK_MAX_HZ / 1e9, rel=0.01)
+
+
+# -- chained partitioned waves (PR 8, DESIGN.md §12) -------------------------
+
+def _stage(i, dma_in=10.0, compute=100.0, dma_out=7.0):
+    from repro.core import timing
+    return timing.StageCost(f"s{i}", dma_in + i, compute - i, dma_out)
+
+
+def test_chained_single_wave_degenerates_to_wave_cycles():
+    from repro.core import timing
+    stages = [_stage(i) for i in range(5)]
+    for n in (1, 2, 4, 8):
+        assert timing.chained_wave_cycles([stages], n) \
+            == timing.wave_cycles(stages, n)
+
+
+def test_chained_mode_delegates():
+    from repro.core import timing
+    waves = [[_stage(i) for i in range(3)], [_stage(i, 4, 30, 2)
+                                             for i in range(2)]]
+    assert timing.wave_cycles(waves, 2, mode="chained") \
+        == timing.chained_wave_cycles(waves, 2)
+
+
+def test_chained_wave_bounds():
+    from repro.core import timing
+    waves = [[_stage(i) for i in range(4)],
+             [_stage(i, 3, 55, 9) for i in range(4)],
+             [_stage(i, 20, 10, 1) for i in range(2)]]
+    for n in (1, 2, 4):
+        chain = timing.chained_wave_cycles(waves, n)
+        # never cheaper than the longest constituent wave...
+        assert chain >= max(timing.wave_cycles(w, n) for w in waves)
+        # ...never costlier than running the waves with cold timelines
+        assert chain <= sum(timing.wave_cycles(w, n) for w in waves) + 1e-9
+
+
+def test_chained_wave_hand_example():
+    from repro.core import timing
+    # one tile, two dependent single-stage waves of (in=10, comp=20, out=5):
+    # wave 1: bus 10, compute ends 30, output drains at 35
+    # wave 2: input waits behind the drain -> bus 45, compute ends 65,
+    #         output drains at 70
+    w = timing.StageCost("w", 10.0, 20.0, 5.0)
+    assert timing.chained_wave_cycles([[w], [w]], 1) == 70.0
