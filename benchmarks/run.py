@@ -73,7 +73,8 @@ def main(smoke: bool = False) -> None:
                   f"engines=2,call_styles=sync+async"))
 
     # -- Table V ------------------------------------------------------------
-    kernels = ("xor", "matmul", "maxpool") if smoke else programs.ALL_KERNELS
+    kernels = ("xor", "matmul", "maxpool") if smoke \
+        else programs.TABLE_V_KERNELS
     sews = (8,) if smoke else table_v.ALL_SEWS
     t0 = time.perf_counter()
     # table_v.run asserts compiles <= #buckets on this pool (CI smoke gate)

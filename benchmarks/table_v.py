@@ -35,7 +35,7 @@ def sweep_buckets(kbs: list) -> set[tuple]:
 
 
 def run(verify_functional: bool = True,
-        kernels: tuple = programs.ALL_KERNELS,
+        kernels: tuple = programs.TABLE_V_KERNELS,
         sews: tuple = ALL_SEWS,
         pool: TilePool | None = None) -> list[dict]:
     kbs = [programs.build(name, sew) for name in kernels for sew in sews]

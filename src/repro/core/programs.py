@@ -97,7 +97,10 @@ def _traced_build(kfn, args, engine: str, sew: int, host_cycles: float = 0.0,
     """Trace + lower a frontend kernel for one engine; shim the result into
     an :class:`EngineBuild` (optionally composing a host-side finishing
     stage after the frontend's extraction ``post``)."""
-    lk = frontend.jit(kfn, engine=engine, sew=sew).lower(*args)
+    # opt="off": registry streams reproduce the paper's hand-written
+    # kernels verbatim (Table V instruction counts) — the optimizer is
+    # benchmarked against them, not baked into them
+    lk = frontend.jit(kfn, engine=engine, sew=sew, opt="off").lower(*args)
     post = lk.post if post_wrap is None \
         else (lambda e, _p=lk.post, _w=post_wrap: _w(_p(e)))
     eb = EngineBuild(list(lk.stream), lk.mem, lk.out_slice,
@@ -178,6 +181,33 @@ def build_relu(sew: int, caesar_bytes: int = 8 * 1024,
     cz, orc_c, _ = make(caesar_bytes, "caesar")
     kz, orc_k, n_out = make(carus_bytes, "carus")
     return _kernel_build(name, sew, (cz, orc_c), (kz, orc_k, n_out))
+
+
+def build_axpy(sew: int, caesar_bytes: int = 2 * 1024,
+               carus_bytes: int = 8 * 1024, seed: int = 5) -> KernelBuild:
+    """Fused multiply-add over full vectors: out = c0 + w * x.
+
+    Written naively — no bank placement hints, accumulator loaded as a
+    plain operand — so its lowering carries exactly the slack the IR
+    optimizer (repro.nmc.opt, DESIGN.md §13) is built to reclaim: on
+    NM-Carus the multi-use accumulator forces a VMV register copy that
+    copy-coalescing deletes; on NM-Caesar all three operands land in one
+    bank and bank-aware placement rehomes one span."""
+    rng = _rng(seed)
+
+    def make(nbytes, engine):
+        n = nbytes // (sew // 8)
+        c0, w, x = (_rand(rng, n, sew) for _ in range(3))
+
+        def kfn(t, c0a, wa, xa):
+            t.store(_mac(t.load(c0a), t.load(wa), t.load(xa)))
+
+        eb, oracle = _traced_build(kfn, (c0, w, x), engine, sew)
+        return eb, oracle, n
+
+    cz, orc_c, _ = make(caesar_bytes, "caesar")
+    kz, orc_k, n_out = make(carus_bytes, "carus")
+    return _kernel_build("axpy", sew, (cz, orc_c), (kz, orc_k, n_out))
 
 
 # ---------------------------------------------------------------------------
@@ -337,11 +367,19 @@ def build(name: str, sew: int, **kw) -> KernelBuild:
         return build_conv2d(sew, **kw)
     if name == "maxpool":
         return build_maxpool(sew, **kw)
+    if name == "axpy":
+        return build_axpy(sew, **kw)
     raise KeyError(name)
 
 
-ALL_KERNELS = ("xor", "add", "mul", "matmul", "gemm", "conv2d", "relu",
-               "leaky_relu", "maxpool")
+# the paper's Table V kernel set — these have published CPU baselines
+# (constants.CPU_CYCLES_PER_OUTPUT) and throughput/energy reference rows
+TABLE_V_KERNELS = ("xor", "add", "mul", "matmul", "gemm", "conv2d", "relu",
+                   "leaky_relu", "maxpool")
+# the full registry: Table V plus kernels added for the optimizer (axpy is
+# deliberately naive — it exhibits the slack opt="O1" reclaims — and has no
+# paper CPU baseline, so Table V sweeps exclude it)
+ALL_KERNELS = TABLE_V_KERNELS + ("axpy",)
 
 
 # ---------------------------------------------------------------------------

@@ -61,8 +61,11 @@ from repro.nmc.partition import (PartitionError, PartitionPlan, slide_halo,
                                  plan as plan_partition)
 from repro.nmc.check import (CHECK_MODES, CheckReport, Diagnostic,
                              VerificationError, assert_submittable,
-                             assert_wave, verify_lowered, verify_plan,
-                             verify_program, verify_wave)
+                             assert_wave, verify_chained_waves,
+                             verify_lowered, verify_plan, verify_program,
+                             verify_resident, verify_wave)
+from repro.nmc.opt import (OPT_LEVELS, OptError, OptReport, RewriteRecord,
+                           optimize)
 
 __all__ = [
     # the one-call frontend (DESIGN.md §7)
@@ -72,7 +75,10 @@ __all__ = [
     # static verification (DESIGN.md §11)
     "CHECK_MODES", "CheckReport", "Diagnostic", "VerificationError",
     "verify_program", "verify_lowered", "verify_plan", "verify_wave",
+    "verify_resident", "verify_chained_waves",
     "assert_wave", "assert_submittable", "slide_halo",
+    # analysis-driven IR optimizer (DESIGN.md §13)
+    "OPT_LEVELS", "OptError", "OptReport", "RewriteRecord", "optimize",
     # tile-parallel partitioning planner (DESIGN.md §9)
     "plan_partition", "PartitionPlan", "PartitionError",
     # shared execution runtime

@@ -4,7 +4,7 @@ The stack hands ``Program`` arrays across four layers (tracer -> lowering ->
 partitioner -> bucketed pools -> scan/Pallas engines), and a malformed
 stream — an out-of-range Carus register, a read of a never-written Caesar
 word, a shard wave that misses part of the output store set — executes
-silently and computes garbage.  This module is the correctness *tooling*
+silently and computes garbage.  This package is the correctness *tooling*
 layer that rejects such programs before they reach an engine:
 
 * :func:`verify_program` — composable static passes over one unified-IR
@@ -12,667 +12,94 @@ layer that rejects such programs before they reach an engine:
   structured :class:`Diagnostic` records (severity, pass name, rule,
   instruction index, tracer-op provenance).  Passes:
 
-  - **structural** — opcode valid for the engine, register/address ranges
-    (Carus VRF bounds, Caesar word addresses vs the 32 KiB image),
-    SEW-legal modes, Caesar entries structurally zero in Carus-only
-    fields, padding NOPs truly neutral.
-  - **dataflow** — def-use liveness: read-before-write against the
-    image-defined spans, MAC/DOT accumulator chains (use-before-init,
-    never-stored), dead writes (overwritten or never read), in-place
-    VMACC hazards on Carus, and store coverage (every word of
-    ``out_slice`` written or image-defined).
-  - **resource** — allocator high-water vs engine capacity, plus an
-    independent bank-conflict / instruction count estimate cross-checked
-    against :mod:`repro.core.timing` (drift between the verifier's and
-    the cost model's view of a program is itself an error).
+  - **structural** (:mod:`repro.nmc.check.structural`) — opcode valid for
+    the engine, register/address ranges (Carus VRF bounds, Caesar word
+    addresses vs the 32 KiB image), SEW-legal modes, Caesar entries
+    structurally zero in Carus-only fields, padding NOPs truly neutral.
+  - **dataflow** (:mod:`repro.nmc.check.dataflow`) — def-use liveness:
+    read-before-write against the image-defined spans, MAC/DOT
+    accumulator chains (use-before-init, never-stored), dead writes
+    (overwritten or never read), in-place VMACC hazards on Carus, and
+    store coverage (every word of ``out_slice`` written or
+    image-defined).
+  - **resource** (:mod:`repro.nmc.check.resource`) — allocator high-water
+    vs engine capacity, plus an independent bank-conflict / instruction
+    count estimate cross-checked against :mod:`repro.core.timing` (drift
+    between the verifier's and the cost model's view of a program is
+    itself an error).
 
 * :func:`verify_lowered` — the same passes over a frontend
   :class:`repro.nmc.frontend.LoweredKernel`, using its recorded metadata
   (image-defined spans, per-instruction tracer provenance, kernel name).
-* :func:`verify_plan` / :func:`verify_wave` — **partition safety**: shard
-  store pieces exactly partition the parent store set, axis-shard loads
-  carry a sufficient slide halo, and the common-bucket padding of a
-  lowered wave is verifier-neutral.
+* :func:`verify_plan` / :func:`verify_wave`
+  (:mod:`repro.nmc.check.partition`) — **partition safety**: shard store
+  pieces exactly partition the parent store set, axis-shard loads carry a
+  sufficient slide halo, and the common-bucket padding of a lowered wave
+  is verifier-neutral.
+* :func:`verify_resident` / :func:`verify_chained_waves`
+  (:mod:`repro.nmc.check.residency`) — **residency hazards**: patch spans
+  never alias resident weight spans, no program write mutates an
+  image-defined span, and chained waves are tile-disjoint (no WAR hazard
+  across dependent submissions).
 * :func:`assert_wave` / :func:`assert_submittable` — the cheap O(entries)
   subset the hot scheduler layers (:class:`repro.nmc.pool.BucketedPool`,
   :class:`repro.nmc.runtime.DispatchQueue`) assert on every dispatch.
 
 ``python -m repro.nmc.check --all`` sweeps every registry kernel x engine
 x SEW (plus partitioned waves) and prints a report — the CI lint gate.
+``--report PATH`` writes the same sweep as stable-schema JSON.
 
 The passes are numpy-vectorized (event sort over def/use streams, not a
 per-instruction Python loop) and :func:`verify_lowered` memoizes its
 verdict on a content fingerprint of the program, so
 ``nmc.jit(fn, check="error")`` — the default — verifies every lowering
 at a few percent overhead (``benchmarks/check_bench.py`` is the gate).
+
+These analyses are also the substrate of the IR optimizer
+(:mod:`repro.nmc.opt`): every rewrite re-runs them as its
+translation-validation gate.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import alu
-from repro.core import constants as C
-from repro.core import isa
-from repro.core.isa import CaesarOp, VOp
-from repro.nmc.program import ENGINES, NOP_OP_ID, PROG_DTYPE, Program
+from repro.nmc.program import ENGINES, PROG_DTYPE, Program
 from repro.nmc.registry import engine_op_ids
 
-#: Verification modes accepted by ``nmc.jit(fn, check=...)``.
-CHECK_MODES = ("error", "warn", "off")
-
-SEVERITIES = ("error", "warning", "info")
-PASSES = ("structural", "dataflow", "resource", "partition")
-
-#: Diagnostics reported per (pass, rule) before summarizing — a corrupted
-#: 8k-instruction stream should not produce 8k records.
-MAX_PER_RULE = 8
-
-_CAESAR_MEM_WORDS = C.CAESAR_MEM_BYTES // C.WORD_BYTES
-_CAESAR_BANK_WORDS = _CAESAR_MEM_WORDS // C.CAESAR_N_BANKS
-_CARUS_REG_WORDS = C.CARUS_REG_WORDS
-_CARUS_N_REGS = C.CARUS_N_VREGS
-
-_NOP_C = NOP_OP_ID["caesar"]
-_NOP_K = NOP_OP_ID["carus"]
-
-# Caesar opcode classes, as boolean lookup tables over the (small) opcode
-# space — `lut[clip(op)] & in-range` beats np.isin on the hot verify path
-_LUT_N = 64
-
-
-def _class_lut(ids) -> np.ndarray:
-    lut = np.zeros(_LUT_N, bool)
-    lut[np.array(sorted(int(i) for i in ids))] = True
-    return lut
-
-
-def _member(op: np.ndarray, lut: np.ndarray) -> np.ndarray:
-    """Vectorized set membership; ids outside [0, _LUT_N) are non-members."""
-    return lut[np.clip(op, 0, _LUT_N - 1)] & (op >= 0) & (op < _LUT_N)
-
-
-_N_FIELDS = len(PROG_DTYPE.names)
-_COL = {name: i for i, name in enumerate(PROG_DTYPE.names)}
-
-
-def _columns(e: np.ndarray) -> np.ndarray:
-    """The entries as a [n, 8] int32 matrix: column slices are much
-    cheaper than repeated structured-field extraction on the hot path."""
-    if not e.flags.c_contiguous:
-        e = np.ascontiguousarray(e)
-    return e.view(np.int32).reshape(len(e), _N_FIELDS)
-
-
-def _caesar_code(ctx: _Ctx, op: np.ndarray) -> np.ndarray:
-    """Per-op combined class code (see :data:`_C_CODE`), computed once per
-    verification and shared between the structural and dataflow passes."""
-    code = ctx.cache.get("ccode")
-    if code is None:
-        code = _C_CODE[np.clip(op, 0, _LUT_N - 1)]   # fancy index: a copy
-        if len(op) and int(op.min()) < 0:
-            code[op < 0] = 0
-        ctx.cache["ccode"] = code
-    return code
-
-
-_C_STORE = _class_lut(isa.CAESAR_STORE_OPS)
-_C_READ = _class_lut(o for o in CaesarOp
-                     if o not in (CaesarOp.CSRW, CaesarOp.NOP))
-_C_VALID = _class_lut(engine_op_ids("caesar"))
-
-# combined per-op class code (bit0 read, bit1 store, bit2 valid, bit3
-# MAC/DOT chain) — one lookup serves the structural and dataflow passes
-_C_CODE = (_C_READ * 1 + _C_STORE * 2 + _C_VALID * 4
-           + _class_lut([CaesarOp.MAC_INIT, CaesarOp.MAC,
-                         CaesarOp.MAC_STORE, CaesarOp.DOT_INIT,
-                         CaesarOp.DOT, CaesarOp.DOT_STORE]) * 8
-           ).astype(np.int8)
-
-# Carus compact-id classes
-_K_ID = isa.COMPACT_ID
-_K_ARITH = _class_lut(_K_ID[v] for v in isa.ARITH_OPS)
-_K_MACC = _K_ID[VOp.VMACC]
-_K_MV = _K_ID[VOp.VMV]
-_K_SLIDES = _class_lut([_K_ID[VOp.VSLIDEUP], _K_ID[VOp.VSLIDEDOWN]])
-_K_EMVV, _K_EMVX = _K_ID[VOp.EMVV], _K_ID[VOp.EMVX]
-_K_SETVL = _K_ID[VOp.VSETVL]
-_K_MODE_BITS = 0x3 | isa.MODE_INDIRECT | isa.MODE_SLIDE1
-
-
-# ---------------------------------------------------------------------------
-# Diagnostics
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class Diagnostic:
-    """One verifier finding, with enough provenance to locate the defect:
-    the pass and rule that fired, the instruction index in the lowered
-    stream, and (when the program came from the traced frontend) the
-    tracer-op index it lowered from."""
-
-    severity: str               # "error" | "warning" | "info"
-    pass_name: str              # "structural" | "dataflow" | ...
-    rule: str                   # stable slug, e.g. "read-before-write"
-    message: str
-    kernel: Optional[str] = None
-    instr: Optional[int] = None       # instruction index in the stream
-    op_index: Optional[int] = None    # tracer node index (provenance)
-
-    def __str__(self) -> str:
-        where = self.kernel or "<program>"
-        if self.instr is not None:
-            where += f" instr#{self.instr}"
-        if self.op_index is not None:
-            where += f" (traced op#{self.op_index})"
-        return (f"{self.severity}[{self.pass_name}/{self.rule}] "
-                f"{where}: {self.message}")
-
-
-@dataclasses.dataclass
-class CheckReport:
-    """All diagnostics of one verification run."""
-
-    target: str                       # what was verified (kernel / plan)
-    diagnostics: List[Diagnostic]
-
-    @property
-    def errors(self) -> List[Diagnostic]:
-        return [d for d in self.diagnostics if d.severity == "error"]
-
-    @property
-    def warnings(self) -> List[Diagnostic]:
-        return [d for d in self.diagnostics if d.severity == "warning"]
-
-    @property
-    def ok(self) -> bool:
-        """No errors (warnings and infos allowed)."""
-        return not self.errors
-
-    @property
-    def clean(self) -> bool:
-        """No errors and no warnings (infos allowed)."""
-        return not self.errors and not self.warnings
-
-    def by_rule(self, rule: str) -> List[Diagnostic]:
-        return [d for d in self.diagnostics if d.rule == rule]
-
-    def render(self) -> str:
-        if not self.diagnostics:
-            return f"{self.target}: clean"
-        lines = [f"{self.target}: {len(self.errors)} error(s), "
-                 f"{len(self.warnings)} warning(s)"]
-        lines += [f"  {d}" for d in self.diagnostics]
-        return "\n".join(lines)
-
-    def raise_if_errors(self) -> "CheckReport":
-        if self.errors:
-            raise VerificationError(self)
-        return self
-
-    def extend(self, other: "CheckReport") -> "CheckReport":
-        self.diagnostics.extend(other.diagnostics)
-        return self
-
-
-class VerificationError(Exception):
-    """A program failed static verification (``check="error"``)."""
-
-    def __init__(self, report: CheckReport):
-        self.report = report
-        super().__init__(report.render())
-
-
-# ---------------------------------------------------------------------------
-# Pass context + emission helpers
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class _Ctx:
-    kernel: Optional[str]
-    out_slice: Optional[Tuple[int, int]]
-    init_spans: Optional[Sequence[Tuple[int, int]]]   # image-defined words
-    used_words: int
-    prov: Optional[Sequence[int]]
-    diags: List[Diagnostic]
-    cache: dict = dataclasses.field(default_factory=dict)
-
-    def op_index(self, instr: Optional[int]) -> Optional[int]:
-        if instr is None or self.prov is None or instr >= len(self.prov):
-            return None
-        return self.prov[instr]
-
-    def emit(self, severity: str, pass_name: str, rule: str, message: str,
-             instr: Optional[int] = None) -> None:
-        self.diags.append(Diagnostic(
-            severity, pass_name, rule, message, kernel=self.kernel,
-            instr=None if instr is None else int(instr),
-            op_index=self.op_index(instr)))
-
-    def emit_rows(self, severity: str, pass_name: str, rule: str,
-                  rows: np.ndarray, fmt: Callable[[int], str]) -> None:
-        """Emit one diagnostic per flagged instruction row, capped at
-        :data:`MAX_PER_RULE` with a summarizing tail record."""
-        rows = np.asarray(rows)
-        for i in rows[:MAX_PER_RULE]:
-            self.emit(severity, pass_name, rule, fmt(int(i)), instr=int(i))
-        if len(rows) > MAX_PER_RULE:
-            self.emit(severity, pass_name, rule,
-                      f"... and {len(rows) - MAX_PER_RULE} more "
-                      f"'{rule}' findings")
-
-
-def _defined_words(ctx: _Ctx, capacity: int) -> Optional[np.ndarray]:
-    """Boolean image-defined map, or None when unknown (hand-built
-    programs verify structurally but skip init-sensitive dataflow)."""
-    if ctx.init_spans is None:
-        return None
-    defined = np.zeros(capacity, bool)
-    for start, nw in ctx.init_spans:
-        lo = max(0, int(start))
-        defined[lo:min(capacity, int(start) + int(nw))] = True
-    return defined
-
-
-# ---------------------------------------------------------------------------
-# Structural pass
-# ---------------------------------------------------------------------------
-
-def _structural_caesar(e: np.ndarray, ctx: _Ctx) -> None:
-    m = _columns(e)
-    op = m[:, 0]
-    code = _caesar_code(ctx, op)
-    bad = (code & 4) == 0
-    ctx.emit_rows("error", "structural", "bad-opcode", np.flatnonzero(bad),
-                  lambda i: f"opcode {int(op[i])} is not an NM-Caesar "
-                            f"bus micro-op")
-    addrs = m[:, 1:4]                   # dest / src1 / src2
-    oob_any = (addrs < 0) | (addrs >= _CAESAR_MEM_WORDS)
-    if oob_any.any():                   # clean programs skip the per-field walk
-        real = ~bad & (op != _NOP_C)
-        for c, f in enumerate(("dest", "src1", "src2")):
-            v = addrs[:, c]
-            ctx.emit_rows(
-                "error", "structural", "oob-address",
-                np.flatnonzero(real & oob_any[:, c]),
-                lambda i, f=f, v=v: f"{f}={int(v[i])} outside the "
-                f"{_CAESAR_MEM_WORDS}-word (32 KiB) macro")
-    carus_f = m[:, 4:]                  # sval1 / sval2 / imm / mode
-    junk = None
-    if carus_f.any():
-        junk = carus_f.any(axis=1)
-        ctx.emit_rows(
-            "error", "structural", "nonzero-carus-field",
-            np.flatnonzero(junk),
-            lambda i: "Caesar entries must be structurally zero in the "
-            "Carus-only fields (sval1/sval2/imm/mode); Program.from_entries "
-            "normalizes them")
-    nops = op == _NOP_C
-    if nops.any():
-        nop_bad = nops & addrs.any(axis=1)
-        if junk is not None:
-            nop_bad &= ~junk
-        ctx.emit_rows(
-            "error", "structural", "nop-not-neutral",
-            np.flatnonzero(nop_bad),
-            lambda i: "padding NOP carries non-zero operand fields — not a "
-            "neutral bucket filler")
-
-
-def _carus_regs(e: np.ndarray) -> tuple:
-    """Resolved (vd, vs2, vs1) operand indices per entry: direct fields,
-    or the bytes of ``sval2`` under MODE_INDIRECT (the engine resolves
-    these at runtime and silently wraps modulo n_regs — exactly the bug
-    class the bounds check below catches statically)."""
-    ind = (e["mode"] & isa.MODE_INDIRECT) != 0
-    s2 = e["sval2"]
-    vd = np.where(ind, (s2 >> 16) & 0xFF, e["dest"])
-    vs2 = np.where(ind, (s2 >> 8) & 0xFF, e["src2"])
-    vs1 = np.where(ind, s2 & 0xFF, e["src1"])
-    return vd, vs2, vs1
-
-
-def _carus_uses(e: np.ndarray) -> tuple:
-    """Boolean (uses_vd, reads_vd, uses_vs2, uses_vs1, writes_vd) masks
-    from the engine's operand semantics per opcode and mode."""
-    op, opmode = e["op"], e["mode"] & 0x3
-    arith = _member(op, _K_ARITH)
-    macc = op == _K_MACC
-    mv = op == _K_MV
-    slide = _member(op, _K_SLIDES)
-    vv = opmode == isa.MODE_VV
-    writes_vd = arith | macc | mv | slide | (op == _K_EMVV)
-    reads_vd = macc | (op == _K_EMVV)      # in-place accumulate / RMW lane
-    uses_vs2 = arith | macc | slide | (op == _K_EMVX)
-    uses_vs1 = (arith | macc | mv) & vv    # .vv second operand (VMV copies)
-    return writes_vd | reads_vd, reads_vd, uses_vs2, uses_vs1, writes_vd
-
-
-def _carus_operands(ctx: _Ctx, e: np.ndarray) -> tuple:
-    """(regs, uses) for the program, cached on the ctx: both the
-    structural and the dataflow pass need them, and on the tiny programs
-    carus lowers to, the numpy-call count is the whole verify cost."""
-    ops = ctx.cache.get("kops")
-    if ops is None:
-        ops = (_carus_regs(e), _carus_uses(e))
-        ctx.cache["kops"] = ops
-    return ops
-
-
-def _structural_carus(e: np.ndarray, ctx: _Ctx, sew: int) -> None:
-    op = e["op"]
-    bad = (op < 0) | (op >= len(isa.VOP_COMPACT))
-    ctx.emit_rows("error", "structural", "bad-opcode", np.flatnonzero(bad),
-                  lambda i: f"opcode {int(op[i])} is outside the xvnmc "
-                            f"compact-id space [0, {len(isa.VOP_COMPACT)})")
-    ok = ~bad
-    mode = e["mode"]
-    bad_mode = ok & (((mode & ~_K_MODE_BITS) != 0) | ((mode & 0x3) == 0x3))
-    ctx.emit_rows("error", "structural", "bad-mode",
-                  np.flatnonzero(bad_mode),
-                  lambda i: f"mode={int(mode[i])} is not a legal "
-                            f"vv/vx/vi (+indirect/slide1) encoding")
-    (vd, vs2, vs1), (uses_vd, _, uses_vs2, uses_vs1, _) = \
-        _carus_operands(ctx, e)
-    for name, idxs, used in (("vd", vd, uses_vd), ("vs2", vs2, uses_vs2),
-                             ("vs1", vs1, uses_vs1)):
-        oob = ok & used & ((idxs < 0) | (idxs >= _CARUS_N_REGS))
-        ctx.emit_rows(
-            "error", "structural", "oob-register", np.flatnonzero(oob),
-            lambda i, name=name, idxs=idxs: f"{name}=v{int(idxs[i])} "
-            f"outside the {_CARUS_N_REGS}-register VRF (the engine would "
-            f"silently wrap modulo {_CARUS_N_REGS})")
-    setvl = ok & (op == _K_SETVL)
-    vlmax = _CARUS_REG_WORDS * (32 // sew)
-    sval1 = e["sval1"]
-    ctx.emit_rows(
-        "warning", "structural", "vl-clamped",
-        np.flatnonzero(setvl & (sval1 > vlmax)),
-        lambda i: f"VSETVL requests vl={int(sval1[i])} > VLMAX({sew})="
-        f"{vlmax}; the engine clamps")
-    ctx.emit_rows(
-        "warning", "structural", "vl-empty",
-        np.flatnonzero(setvl & (sval1 <= 0)),
-        lambda i: f"VSETVL requests vl={int(sval1[i])}: every following "
-        f"vector op writes nothing")
-    nop_bad = (op == _NOP_K) & (
-        (e["dest"] | e["src1"] | e["src2"] | e["sval1"] | e["sval2"]
-         | e["imm"] | e["mode"]) != 0)
-    ctx.emit_rows(
-        "error", "structural", "nop-not-neutral", np.flatnonzero(nop_bad),
-        lambda i: "padding VNOP carries non-zero fields — not a neutral "
-        "bucket filler")
-
-
-def check_structural(prog: Program, ctx: _Ctx) -> None:
-    if prog.engine == "caesar":
-        _structural_caesar(prog.entries, ctx)
-    else:
-        _structural_carus(prog.entries, ctx, prog.sew)
-
-
-# ---------------------------------------------------------------------------
-# Dataflow pass: event-sorted def-use analysis
-# ---------------------------------------------------------------------------
-
-def _event_analysis(ctx: _Ctx, capacity: int, unit: str,
-                    r_loc: np.ndarray, r_row: np.ndarray,
-                    w_loc: np.ndarray, w_row: np.ndarray,
-                    out_range: Optional[Tuple[int, int]],
-                    acc_read_rows: Optional[np.ndarray] = None) -> None:
-    """Shared def-use core for both engines: sort (location, row, kind)
-    events — reads before writes at the same instruction, so an in-place
-    update reads its old value first — then flag reads whose location's
-    first event is that read (read-before-write, against the image-defined
-    map), writes whose next same-location event is another write
-    (dead-write / WAW), final writes that fall outside the output window,
-    and output words never written nor image-defined."""
-    defined = _defined_words(ctx, capacity)
-    nr, nw = len(r_loc), len(w_loc)
-    if nr + nw:
-        # pack each event into one int64 key (loc, then row, then
-        # read<write) and sort it IN PLACE — row and kind are recovered by
-        # decoding the key, so no permutation array, no gathers, and no
-        # 3-key lexsort on the <5% lowering-overhead hot path
-        mr = int(r_row.max()) if nr else 0
-        mw = int(w_row.max()) if nw else 0
-        # power-of-two span: decode is a shift/mask, not an int division
-        # (arithmetic right shift floors, so negative garbage locs from
-        # corrupted programs still decode and sort consistently)
-        shift = (2 * max(mr, mw) + 1).bit_length()
-        key = np.empty(nr + nw, np.int64)
-        key[:nr] = (r_loc << shift) + 2 * r_row
-        key[nr:] = (w_loc << shift) + 2 * w_row + 1
-        key.sort()
-        loc = key >> shift
-        kind = key & 1
-    else:
-        loc = kind = np.zeros(0, np.int64)
-        shift = 1
-
-    def row_at(p: int) -> int:
-        # rows only matter at finding positions — decode lazily per hit
-        return (int(key[p]) & ((1 << shift) - 1)) >> 1
-
-    first = np.empty(len(loc), bool)
-    if len(loc):
-        first[0] = True
-        first[1:] = loc[1:] != loc[:-1]
-
-    if defined is not None and len(loc):
-        cand = np.flatnonzero(first & (kind == 0))
-        pos = cand[~defined[np.clip(loc[cand], 0, capacity - 1)]]
-        acc_rows = set() if acc_read_rows is None else set(
-            int(r) for r in acc_read_rows)
-        for p in pos[:MAX_PER_RULE]:
-            extra = (" (in-place VMACC accumulator)"
-                     if row_at(p) in acc_rows else "")
-            ctx.emit("error", "dataflow", "read-before-write",
-                     f"reads {unit} {int(loc[p])} before any write "
-                     f"(not image-defined either){extra}",
-                     instr=row_at(p))
-        if len(pos) > MAX_PER_RULE:
-            ctx.emit("error", "dataflow", "read-before-write",
-                     f"... and {len(pos) - MAX_PER_RULE} more "
-                     f"'read-before-write' findings")
-
-    if len(loc):
-        nxt_same = np.empty(len(loc), bool)
-        nxt_same[-1] = False
-        nxt_same[:-1] = loc[1:] == loc[:-1]
-        waw = np.zeros(len(loc), bool)
-        waw[:-1] = (kind[:-1] == 1) & nxt_same[:-1] & (kind[1:] == 1)
-        pos = np.flatnonzero(waw)
-        for p in pos[:MAX_PER_RULE]:
-            ctx.emit("warning", "dataflow", "dead-write",
-                     f"{unit} {int(loc[p])} is overwritten at "
-                     f"instr#{row_at(p + 1)} before any read",
-                     instr=row_at(p))
-        if len(pos) > MAX_PER_RULE:
-            ctx.emit("warning", "dataflow", "dead-write",
-                     f"... and {len(pos) - MAX_PER_RULE} more "
-                     f"'dead-write' findings")
-        if out_range is not None:
-            lo, hi = out_range
-            final = (kind == 1) & ~nxt_same
-            dead_final = final & ((loc < lo) | (loc >= hi))
-            pos = np.flatnonzero(dead_final)
-            for p in pos[:MAX_PER_RULE]:
-                ctx.emit("warning", "dataflow", "dead-write",
-                         f"{unit} {int(loc[p])} is written, never read, "
-                         f"and outside the output window [{lo}, {hi})",
-                         instr=row_at(p))
-            if len(pos) > MAX_PER_RULE:
-                ctx.emit("warning", "dataflow", "dead-write",
-                         f"... and {len(pos) - MAX_PER_RULE} more "
-                         f"'dead-write' findings")
-
-    # store coverage: every output location written or image-defined
-    if out_range is not None and defined is not None:
-        lo, hi = out_range
-        covered = defined.copy()
-        if len(w_loc):
-            covered[np.clip(w_loc, 0, capacity - 1)] = True
-        missing = np.flatnonzero(~covered[lo:hi]) + lo
-        for m in missing[:MAX_PER_RULE]:
-            ctx.emit("error", "dataflow", "uncovered-store",
-                     f"output {unit} {int(m)} is never written and not "
-                     f"image-defined — the extracted result would be "
-                     f"uninitialized zeros")
-        if len(missing) > MAX_PER_RULE:
-            ctx.emit("error", "dataflow", "uncovered-store",
-                     f"... and {len(missing) - MAX_PER_RULE} more "
-                     f"uncovered output {unit}s")
-
-
-def _chain_check(ctx: _Ctx, op: np.ndarray, init_id: int, body_id: int,
-                 store_id: int, label: str) -> None:
-    """Accumulator-chain protocol (MAC_INIT/MAC/MAC_STORE and the DOT
-    triple): body/store ops require a live chain; INIT while live (and a
-    chain that never stores) are dead accumulations."""
-    chain = (op == init_id) | (op == body_id) | (op == store_id)
-    if not chain.any():
-        return
-    rows = np.flatnonzero(chain)
-    kinds = op[rows]
-    t = np.where(kinds == init_id, 1, np.where(kinds == store_id, -1, 0))
-    nz = np.flatnonzero(t != 0)
-    last = np.full(len(rows), -1)
-    if len(nz):
-        marks = np.full(len(rows), -1)
-        marks[nz] = nz
-        last = np.maximum.accumulate(marks)
-    prev = np.concatenate([[-1], last[:-1]])
-    live_before = (prev >= 0) & (t[np.clip(prev, 0, None)] == 1)
-    use_dead = ((kinds == body_id) | (kinds == store_id)) & ~live_before
-    ctx.emit_rows(
-        "error", "dataflow", "acc-use-before-init",
-        rows[np.flatnonzero(use_dead)],
-        lambda i: f"{label} accumulator used with no live "
-        f"{label}_INIT chain")
-    reinit = (kinds == init_id) & live_before
-    ctx.emit_rows(
-        "warning", "dataflow", "dead-accumulator",
-        rows[np.flatnonzero(reinit)],
-        lambda i: f"{label}_INIT while the previous chain was never "
-        f"stored — the pending accumulation is dead")
-    if last[-1] >= 0 and t[last[-1]] == 1:
-        ctx.emit("warning", "dataflow", "dead-accumulator",
-                 f"{label} chain never reaches {label}_STORE — the "
-                 f"accumulation is dead", instr=int(rows[last[-1]]))
-
-
-def _dataflow_caesar(prog: Program, ctx: _Ctx) -> None:
-    m = _columns(prog.entries)
-    op = m[:, 0]
-    code = _caesar_code(ctx, op)
-    ridx = np.flatnonzero(code & 1)
-    widx = np.flatnonzero(code & 2)
-    r_loc = m[ridx, 2:4].T.reshape(-1)          # src1 then src2 reads
-    r_row = np.concatenate([ridx, ridx])
-    out = None
-    if ctx.out_slice is not None:
-        out = (int(ctx.out_slice[0]), int(ctx.out_slice[0])
-               + int(ctx.out_slice[1]))
-    _event_analysis(ctx, _CAESAR_MEM_WORDS, "word",
-                    r_loc.astype(np.int64), r_row,
-                    m[widx, 1].astype(np.int64), widx, out)
-    if (code & 8).any():                        # any MAC/DOT chain ops
-        _chain_check(ctx, op, int(CaesarOp.MAC_INIT), int(CaesarOp.MAC),
-                     int(CaesarOp.MAC_STORE), "MAC")
-        _chain_check(ctx, op, int(CaesarOp.DOT_INIT), int(CaesarOp.DOT),
-                     int(CaesarOp.DOT_STORE), "DOT")
-
-
-def _dataflow_carus(prog: Program, ctx: _Ctx) -> None:
-    e = prog.entries
-    rows = np.arange(len(e))
-    (vd, vs2, vs1), (_, reads_vd, uses_vs2, uses_vs1, writes_vd) = \
-        _carus_operands(ctx, e)
-    # match the engine's wrap so the dataflow stays well-indexed even when
-    # the structural pass already flagged an out-of-range register
-    vd, vs2, vs1 = (vd % _CARUS_N_REGS, vs2 % _CARUS_N_REGS,
-                    vs1 % _CARUS_N_REGS)
-    r_loc = np.concatenate([vs2[uses_vs2], vs1[uses_vs1], vd[reads_vd]])
-    r_row = np.concatenate([rows[uses_vs2], rows[uses_vs1], rows[reads_vd]])
-    out = None
-    if ctx.out_slice is not None:
-        lo, nw = int(ctx.out_slice[0]), int(ctx.out_slice[1])
-        out = (lo // _CARUS_REG_WORDS,
-               -(-(lo + nw) // _CARUS_REG_WORDS))
-    # register-granular init map: a load/cpool block defines its registers
-    reg_ctx = ctx
-    if ctx.init_spans is not None:
-        reg_spans = [(s // _CARUS_REG_WORDS,
-                      -(-(s + n) // _CARUS_REG_WORDS) - s // _CARUS_REG_WORDS)
-                     for s, n in ctx.init_spans]
-        reg_ctx = dataclasses.replace(ctx, init_spans=reg_spans)
-    _event_analysis(reg_ctx, _CARUS_N_REGS, "register",
-                    r_loc.astype(np.int64), r_row,
-                    vd[writes_vd].astype(np.int64), rows[writes_vd], out,
-                    acc_read_rows=rows[reads_vd])
-
-
-def check_dataflow(prog: Program, ctx: _Ctx) -> None:
-    if prog.engine == "caesar":
-        _dataflow_caesar(prog, ctx)
-    else:
-        _dataflow_carus(prog, ctx)
-
-
-# ---------------------------------------------------------------------------
-# Resource pass
-# ---------------------------------------------------------------------------
-
-def check_resource(prog: Program, ctx: _Ctx) -> None:
-    from repro.core import timing
-    cap = _CAESAR_MEM_WORDS if prog.engine == "caesar" \
-        else _CARUS_N_REGS * _CARUS_REG_WORDS
-    if ctx.used_words:
-        if ctx.used_words > cap:
-            ctx.emit("error", "resource", "capacity",
-                     f"allocator high-water {ctx.used_words} words exceeds "
-                     f"the {cap}-word tile capacity")
-        else:
-            ctx.emit("info", "resource", "mem-highwater",
-                     f"{ctx.used_words}/{cap} words "
-                     f"({100.0 * ctx.used_words / cap:.1f}%) of tile "
-                     f"memory occupied")
-    try:
-        report = timing.program_cycles(prog)
-    except Exception as exc:  # corrupted stream: the cost model rejects it
-        ctx.emit("error", "resource", "timing-drift",
-                 f"timing.program_cycles rejects the program outright "
-                 f"({type(exc).__name__}: {exc})")
-        return
-    n_real = prog.n_instr - prog.n_nops
-    if report.n_instrs != n_real:
-        ctx.emit("error", "resource", "timing-drift",
-                 f"timing model costs {report.n_instrs} instructions, the "
-                 f"verifier counts {n_real} non-NOP entries — the cost "
-                 f"model and the IR disagree")
-    if prog.engine == "caesar":
-        m = _columns(prog.entries)
-        real = m[:, 0] != _NOP_C
-        same = int(np.count_nonzero(
-            real & (m[:, 2] // _CAESAR_BANK_WORDS
-                    == m[:, 3] // _CAESAR_BANK_WORDS)))
-        modeled = report.detail.get("same_bank_ops")
-        if modeled != same:
-            ctx.emit("error", "resource", "timing-drift",
-                     f"static bank-conflict estimate ({same} same-bank "
-                     f"ops) disagrees with timing.program_cycles "
-                     f"({modeled})")
-        elif same:
-            ctx.emit("info", "resource", "bank-conflicts",
-                     f"{same}/{n_real} ops fetch both operands from one "
-                     f"bank (+{C.CAESAR_SAME_BANK_CYCLES - C.CAESAR_CYCLES_PER_OP} "
-                     f"cycle each, Section III-A2)")
+# Split modules re-exported verbatim: the 1005-line monolith became
+# report / structural / dataflow / resource / partition / residency, and
+# every pre-split import path (`from repro.nmc.check import X`,
+# `check.X`) keeps working through this facade.
+from repro.nmc.check.report import (CHECK_MODES, MAX_PER_RULE, PASSES,
+                                    SEVERITIES, CheckReport, Diagnostic,
+                                    VerificationError, _Ctx, _defined_words)
+from repro.nmc.check.structural import (_CAESAR_BANK_WORDS,
+                                        _CAESAR_MEM_WORDS, _CARUS_N_REGS,
+                                        _CARUS_REG_WORDS, _NOP_C, _NOP_K,
+                                        _caesar_code, _carus_operands,
+                                        _carus_regs, _carus_uses, _class_lut,
+                                        _columns, _member, check_structural)
+from repro.nmc.check.dataflow import (_chain_check, _event_analysis,
+                                      check_dataflow)
+from repro.nmc.check.resource import check_resource
+from repro.nmc.check.partition import verify_plan, verify_wave
+from repro.nmc.check.residency import verify_chained_waves, verify_resident
+
+__all__ = [
+    "CHECK_MODES", "SEVERITIES", "PASSES", "MAX_PER_RULE",
+    "Diagnostic", "CheckReport", "VerificationError",
+    "check_structural", "check_dataflow", "check_resource",
+    "verify_program", "verify_lowered", "clear_memo",
+    "verify_plan", "verify_wave",
+    "verify_resident", "verify_chained_waves",
+    "assert_submittable", "assert_wave", "main",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -716,7 +143,9 @@ def verify_program(prog: Program, *, kernel: Optional[str] = None,
 # invocation — memoize the verdict on a content fingerprint so repeated
 # lowerings pay one 64 KiB hash, not the full pass pipeline.  In-place
 # corruption of `entries` changes the fingerprint, so tampering is never
-# masked by the cache.
+# masked by the cache.  The OrderedDict is LRU-bounded at ``_MEMO_CAP``
+# entries so unbounded registry sweeps cannot grow it without limit;
+# eviction only costs a re-verification on the next identical lowering.
 _MEMO_CAP = 256
 _report_memo: "OrderedDict[tuple, CheckReport]" = OrderedDict()
 
@@ -773,89 +202,6 @@ def verify_lowered(lk, kernel: Optional[str] = None,
         _report_memo[key] = report
         while len(_report_memo) > _MEMO_CAP:
             _report_memo.popitem(last=False)
-    return report
-
-
-# ---------------------------------------------------------------------------
-# Partition safety
-# ---------------------------------------------------------------------------
-
-def verify_plan(parent, plan, kernel: Optional[str] = None) -> CheckReport:
-    """Partition-safety pass over a :class:`repro.nmc.partition.
-    PartitionPlan`: the shards' store pieces must exactly partition every
-    parent store's element range (no gap, no overlap), and axis shards'
-    loads must carry the full slide halo."""
-    from repro.nmc.partition import slide_halo
-    target = kernel or getattr(parent, "name", None) or "<plan>"
-    ctx = _Ctx(kernel=target, out_slice=None, init_spans=None,
-               used_words=0, prov=None, diags=[])
-    per_store: dict = {si: [] for si in range(len(plan.store_trims))}
-    for shard, pieces in enumerate(plan.pieces):
-        for si, lo, hi in pieces:
-            if si not in per_store:
-                ctx.emit("error", "partition", "store-not-partitioned",
-                         f"shard {shard} references store #{si}, but the "
-                         f"parent tape has {len(plan.store_trims)} stores")
-                continue
-            per_store[si].append((lo, hi, shard))
-    for si, trim in enumerate(plan.store_trims):
-        ivs = sorted(per_store[si])
-        pos = 0
-        for lo, hi, shard in ivs:
-            if lo > pos:
-                ctx.emit("error", "partition", "store-not-partitioned",
-                         f"store #{si}: elements [{pos}, {lo}) are covered "
-                         f"by no shard")
-            elif lo < pos:
-                ctx.emit("error", "partition", "store-not-partitioned",
-                         f"store #{si}: elements [{lo}, {min(pos, hi)}) "
-                         f"are covered twice (shard {shard} overlaps)")
-            pos = max(pos, hi)
-        if pos < trim:
-            ctx.emit("error", "partition", "store-not-partitioned",
-                     f"store #{si}: elements [{pos}, {trim}) are covered "
-                     f"by no shard")
-    # halo sufficiency: axis shards replay every load sliced [lo, end);
-    # end must reach hi + the tape's max cumulative slide read-ahead
-    if plan.strategy in ("axis", "single") and plan.pieces:
-        halo = slide_halo(parent)
-        parent_loads = [n for n in parent.nodes if n.op == "load"]
-        for shard, (b, pieces) in enumerate(zip(plan.builders, plan.pieces)):
-            if not pieces:
-                continue
-            lo = min(p[1] for p in pieces)
-            hi = max(p[2] for p in pieces)
-            shard_loads = [n for n in b.nodes if n.op == "load"]
-            for pl, sl in zip(parent_loads, shard_loads):
-                required = min(hi + halo, pl.ne) - lo
-                if sl.ne < required:
-                    ctx.emit(
-                        "error", "partition", "insufficient-halo",
-                        f"shard {shard} load (traced op#{sl.idx}) carries "
-                        f"{sl.ne} elements for piece [{lo}, {hi}) but "
-                        f"slides read ahead {halo}: needs "
-                        f"{required}")
-    return CheckReport(target, ctx.diags)
-
-
-def verify_wave(parent, plan, lks: Sequence,
-                kernel: Optional[str] = None) -> CheckReport:
-    """Partition safety + per-shard verification of a lowered wave,
-    including the common-bucket padding contract: every shard program must
-    sit at one shared instruction count with verifier-neutral NOP tails
-    (the structural nop-not-neutral rule covers the tails)."""
-    target = kernel or getattr(parent, "name", None) or "<wave>"
-    report = verify_plan(parent, plan, kernel=target)
-    ctx = _Ctx(kernel=target, out_slice=None, init_spans=None,
-               used_words=0, prov=None, diags=report.diagnostics)
-    sizes = {lk.program.n_instr for lk in lks}
-    if len(sizes) > 1:
-        ctx.emit("error", "partition", "wave-bucket-mismatch",
-                 f"shard programs pad to different instruction counts "
-                 f"{sorted(sizes)} — the wave would split into several "
-                 f"compile buckets")
-    for i, lk in enumerate(lks):
-        report.extend(verify_lowered(lk, kernel=f"{target}[shard {i}]"))
     return report
 
 
@@ -948,8 +294,45 @@ def _wave_rows(sews: Sequence[int]) -> list:
     return rows
 
 
+#: ``--report`` JSON schema version: bump only on breaking key changes.
+REPORT_SCHEMA = 1
+
+
+def _report_json(rows: Sequence, strict: bool) -> dict:
+    """The sweep as a stable-schema JSON document (the CI artifact).
+
+    Top-level keys: ``schema`` (int), ``strict`` (bool), ``targets``
+    (list of per-target records with ``kernel``/``sew``/``engine``/
+    ``n_instr``/``errors``/``warnings``/``status``/``diagnostics``), and
+    ``summary`` (``targets``/``errors``/``warnings``/``status``).
+    Diagnostic records use :meth:`Diagnostic.as_dict` keys."""
+    targets = []
+    n_err = n_warn = 0
+    for name, sew, engine, n_instr, rep in rows:
+        e, w = len(rep.errors), len(rep.warnings)
+        n_err += e
+        n_warn += w
+        targets.append({
+            "kernel": name, "sew": int(sew), "engine": engine,
+            "n_instr": int(n_instr), "errors": e, "warnings": w,
+            "status": "fail" if e or (strict and w) else "ok",
+            "diagnostics": [d.as_dict() for d in rep.diagnostics
+                            if d.severity != "info"],
+        })
+    return {
+        "schema": REPORT_SCHEMA,
+        "strict": bool(strict),
+        "targets": targets,
+        "summary": {
+            "targets": len(targets), "errors": n_err, "warnings": n_warn,
+            "status": "fail" if n_err or (strict and n_warn) else "ok",
+        },
+    }
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     import argparse
+    import json
     from repro.core import programs as P
 
     ap = argparse.ArgumentParser(
@@ -965,7 +348,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--engine", action="append", default=None,
                     choices=list(ENGINES), help="restrict to one engine")
     ap.add_argument("--report", default=None, metavar="PATH",
-                    help="also write the report to PATH (CI artifact)")
+                    help="also write the sweep as JSON to PATH "
+                         "(CI artifact, schema v%d)" % REPORT_SCHEMA)
     ap.add_argument("--strict", action="store_true",
                     help="fail on warnings too, not just errors")
     ap.add_argument("--no-waves", action="store_true",
@@ -996,10 +380,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                  f"{n_warn} warning(s)")
     if details:
         lines.append("\n" + "\n".join(details))
-    text = "\n".join(lines)
-    print(text)
+    print("\n".join(lines))
     if args.report:
         with open(args.report, "w") as f:
-            f.write(text + "\n")
+            json.dump(_report_json(rows, args.strict), f, indent=2)
+            f.write("\n")
         print(f"report written to {args.report}")
     return 1 if n_err or (args.strict and n_warn) else 0

@@ -524,6 +524,9 @@ class LoweredKernel:
                                     # weights caller (serve/block.py) can
                                     # patch exactly these words per call and
                                     # keep everything else on the tile.
+    opt_report: Optional[object] = None  # repro.nmc.opt.OptReport when the
+                                    # optimizer rewrote this lowering
+                                    # (None: opt="off" or nothing fired)
     _prog: Optional[Program] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -1140,6 +1143,16 @@ def _check_checkmode(check: str) -> str:
     return check
 
 
+def _check_opt(opt: str) -> str:
+    """Eager opt-level validation (same discipline as
+    :func:`_check_engine`): ``"O1"`` or ``"off"``."""
+    from repro.nmc.opt import OPT_LEVELS
+    if opt not in OPT_LEVELS:
+        raise ValueError(f"unknown opt level {opt!r}: expected one of "
+                         f"{OPT_LEVELS}")
+    return opt
+
+
 def _apply_report(report, mode: str) -> None:
     """Enforce a :class:`repro.nmc.check.CheckReport` under the kernel's
     ``check=`` policy: ``"error"`` raises on errors, ``"warn"`` surfaces
@@ -1164,13 +1177,14 @@ class CompiledKernel:
     def __init__(self, fn: Callable, engine: str = "auto", sew: int = 8,
                  runtime: Optional[NmcRuntime] = None, tiles: int = 1,
                  partition: str = "auto", backend: str = "auto",
-                 check: str = "error"):
+                 check: str = "error", opt: str = "O1"):
         # kwargs validate eagerly: a typo'd engine string or an impossible
         # tile count must fail at decoration time with a named cause, not
         # as a deep-stack assertion at first call
         _check_engine(engine)
         _check_backend(backend)
         _check_checkmode(check)
+        _check_opt(opt)
         if sew not in alu.SEWS:
             raise ValueError(
                 f"unsupported sew {sew!r}: expected one of "
@@ -1187,6 +1201,7 @@ class CompiledKernel:
         self.partition = partition
         self.backend = backend
         self.check = check
+        self.opt = opt
         self._runtime = runtime
         self.__name__ = getattr(fn, "__name__", "kernel")
         self.__doc__ = getattr(fn, "__doc__", None)
@@ -1215,14 +1230,25 @@ class CompiledKernel:
     def _check_mode(self, check: Optional[str]) -> str:
         return self.check if check is None else _check_checkmode(check)
 
+    def _opt_level(self, opt: Optional[str]) -> str:
+        return self.opt if opt is None else _check_opt(opt)
+
     def lower(self, *args, engine: Optional[str] = None,
               sew: Optional[int] = None,
-              check: Optional[str] = None) -> LoweredKernel:
+              check: Optional[str] = None,
+              opt: Optional[str] = None) -> LoweredKernel:
         builder = self.trace(*args, sew=sew)
         eng = _check_engine(engine) if engine is not None else self.engine
         if eng == "auto":
             eng = select_engine(builder)
         lk = _LOWERINGS[eng](builder).lower()
+        level = self._opt_level(opt)
+        if level != "off":
+            # optimize before the check= gate so the verifier's report
+            # describes the program the engine will actually run; every
+            # rewrite was already translation-validated internally
+            from repro.nmc import opt as _opt
+            _opt.optimize(lk, level)
         mode = self._check_mode(check)
         if mode != "off":
             from repro.nmc import check as _chk
@@ -1244,7 +1270,8 @@ class CompiledKernel:
 
     def lower_wave(self, *args, engine: Optional[str] = None,
                    tiles: Optional[int] = None,
-                   check: Optional[str] = None):
+                   check: Optional[str] = None,
+                   opt: Optional[str] = None):
         """Lower a partitioned wave: returns ``(plan, lowered_shards)``
         with every shard program NOP-padded to the wave's common
         instruction bucket, so the whole wave lands in **one** bucketed
@@ -1257,6 +1284,13 @@ class CompiledKernel:
             # head shard's choice holds for the whole wave
             eng = select_engine(pplan.builders[0])
         lks = [_LOWERINGS[eng](sb).lower() for sb in pplan.builders]
+        level = self._opt_level(opt)
+        if level != "off":
+            # shards optimize *before* the common-bucket agreement: a
+            # compacted wave drops into the smaller bucket as a unit
+            from repro.nmc import opt as _opt
+            for lk in lks:
+                _opt.optimize(lk, level)
         bucket = instr_bucket(max(lk.program.n_instr for lk in lks))
         for lk in lks:
             lk.pad_to(bucket)
@@ -1272,13 +1306,14 @@ class CompiledKernel:
     # -- execution -----------------------------------------------------------
     def __call__(self, *args, engine: Optional[str] = None,
                  tiles: Optional[int] = None,
-                 backend: Optional[str] = None) -> np.ndarray:
+                 backend: Optional[str] = None,
+                 opt: Optional[str] = None) -> np.ndarray:
         """Synchronous call: submit and resolve immediately.  Shares the
         async path's tiles and jit cache, so sync and async are bit-exact
         by construction and device state stays bounded (one resident
         buffer per runtime tile, re-installed per call)."""
         return self.call_async(*args, engine=engine, tiles=tiles,
-                               backend=backend).result()
+                               backend=backend, opt=opt).result()
 
     def resolve_backend(self, backend: Optional[str] = None) -> str:
         """The executor this call will use: per-call override > kernel
@@ -1293,7 +1328,8 @@ class CompiledKernel:
 
     def call_async(self, *args, engine: Optional[str] = None,
                    tiles: Optional[int] = None,
-                   backend: Optional[str] = None):
+                   backend: Optional[str] = None,
+                   opt: Optional[str] = None):
         """Submit through the runtime's DispatchQueue; returns the future
         immediately (double-buffered staging, batched launch waves).
 
@@ -1312,12 +1348,12 @@ class CompiledKernel:
         bk = self.resolve_backend(backend)
         rt = self.runtime
         if n == 1:
-            lk = self.lower(*args, engine=engine)
+            lk = self.lower(*args, engine=engine, opt=opt)
             return rt.queue.submit(rt.jit_tile, lk.program, image=lk.mem,
                                    out_slice=lk.out_slice, post=lk.post,
                                    backend=bk)
         from repro.nmc.runtime import GatherFuture
-        pplan, lks = self.lower_wave(*args, engine=engine, tiles=n)
+        pplan, lks = self.lower_wave(*args, engine=engine, tiles=n, opt=opt)
         futs = [rt.queue.submit(tile, lk.program, image=lk.mem,
                                 out_slice=lk.out_slice, post=lk.post,
                                 backend=bk)
@@ -1328,7 +1364,7 @@ class CompiledKernel:
 def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
         runtime: Optional[NmcRuntime] = None, tiles: int = 1,
         partition: str = "auto", backend: str = "auto",
-        check: str = "error"):
+        check: str = "error", opt: str = "O1"):
     """Compile a traced kernel function into a :class:`CompiledKernel`.
 
     ``engine`` is ``"auto"`` (NM-Caesar when bus-expressible, NM-Carus
@@ -1344,17 +1380,21 @@ def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
     DESIGN.md §11) on every lowered program: ``"error"`` (default —
     raise :class:`repro.nmc.check.VerificationError` on any error-severity
     diagnostic), ``"warn"`` (surface findings as Python warnings) or
-    ``"off"``.  All kwargs validate eagerly with ``ValueError``.  Usable
-    as a decorator (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``)
-    or a call."""
+    ``"off"``.  ``opt`` runs the analysis-driven IR optimizer
+    (:mod:`repro.nmc.opt`, DESIGN.md §13) on every lowered program:
+    ``"O1"`` (default — translation-validated rewrites: dead-write
+    elimination, NOP/VSETVL compaction, bank-conflict-aware placement,
+    copy coalescing) or ``"off"``; both are overridable per call.  All
+    kwargs validate eagerly with ``ValueError``.  Usable as a decorator
+    (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``) or a call."""
     if fn is None:
         return lambda f: CompiledKernel(f, engine=engine, sew=sew,
                                         runtime=runtime, tiles=tiles,
                                         partition=partition, backend=backend,
-                                        check=check)
+                                        check=check, opt=opt)
     return CompiledKernel(fn, engine=engine, sew=sew, runtime=runtime,
                           tiles=tiles, partition=partition, backend=backend,
-                          check=check)
+                          check=check, opt=opt)
 
 
 def kernel(fn: Optional[Callable] = None, **options):

@@ -150,7 +150,7 @@ def _replay(b: ProgramBuilder, keep: set,
     oracle is bit-exact with the sliced original by construction, and the
     lowerings see a perfectly ordinary tape (same fusion/placement rules)."""
     nb = ProgramBuilder(b.sew, name=getattr(b, "name", "kernel"))
-    m: dict = {}
+    m: dict[int, object] = {}       # original node idx -> replayed value
     for n in b.nodes:
         if n.idx not in keep:
             continue

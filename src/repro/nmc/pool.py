@@ -229,8 +229,8 @@ class ResidentPool:
                  backend: str = "scan"):
         self.pool = pool if pool is not None \
             else BucketedPool(donate=True, backend=backend)
-        self._engine: dict = {}      # tile id -> engine name
-        self._state: dict = {}       # tile id -> resident device state
+        self._engine: dict[object, str] = {}   # tile id -> engine name
+        self._state: dict[object, object] = {}  # tile id -> resident state
         self._ids = itertools.count()
         self.loads = 0
         self.stores = 0

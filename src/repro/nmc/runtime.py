@@ -213,10 +213,10 @@ class DispatchQueue:
         self.pool = pool if pool is not None else ResidentPool()
         self.mode = mode
         self._queued: list[_WorkItem] = []
-        self._last: dict = {}       # tile -> most recent future (FIFO tail)
+        self._last: dict[object, NMCFuture] = {}  # tile -> FIFO tail
         self._outstanding: dict[int, NMCFuture] = {}   # pruned at result()
         self._seq = itertools.count()
-        self._staged_pending: dict = {}  # tile -> staged-not-installed count
+        self._staged_pending: dict[object, int] = {}  # tile -> staged count
         self.submitted = 0
         self.launched = 0
         self.resolved = 0
@@ -313,7 +313,7 @@ class DispatchQueue:
                 # partial memory-mode write on top of the resident state
                 # (after any install, so patch words win over image words)
                 self.pool.patch(it.tile, it.patch)
-        by_backend: dict = {}
+        by_backend: dict[str, list[_WorkItem]] = {}
         for it in wave:
             by_backend.setdefault(it.backend, []).append(it)
         for backend, items in by_backend.items():

@@ -62,6 +62,7 @@ import numpy as np
 
 from repro import nmc
 from repro.core import timing
+from repro.nmc import check as nmc_check
 from repro.nmc.pool import WORD_BYTES
 from repro.nmc.runtime import DispatchQueue, GatherFuture
 
@@ -191,6 +192,15 @@ class ResidentProjection:
                                              self._w32)
         self.static = _layout_static(plan_p, lks_p, plan_z, lks_z)
         self.plan, self.lks = plan_p, lks_p
+        # residency hazard pass (repro.nmc.check.residency): statically
+        # prove per shard that patch spans never alias the resident
+        # weight spans and no program write mutates image-defined words —
+        # the contract every later patch-only submit depends on
+        self.hazard_reports = tuple(
+            nmc_check.verify_resident(lk, kernel=f"{proj.__name__}[{j}]")
+            for j, lk in enumerate(lks_p))
+        for rep in self.hazard_reports:
+            rep.raise_if_errors()
         uid = next(_IDS)
         self.tiles = tuple(("resident", uid, j) for j in range(len(lks_p)))
         self._installed = False
@@ -337,6 +347,23 @@ class ResidentBlock:
             self.w8[name], self.w_scale[name], self.bias[name] = w8, s, b
             self._proj[name] = ResidentProjection(
                 name, w8, self.queue, rows=self.m, tiles=tiles)
+        # the four dependent waves of one step must be tile-disjoint, or
+        # wave k+1's DMA-in races wave k's DMA-out on a shared tile; the
+        # private ("resident", uid, shard) namespace makes this hold by
+        # construction — the hazard pass proves it stays that way
+        self.wave_report = nmc_check.verify_chained_waves(
+            self._step_wave_tiles(), kernel="resident_block")
+        self.wave_report.raise_if_errors()
+
+    def _step_wave_tiles(self) -> list:
+        """Tile IDs of the four dependent GEMM waves of one step
+        (mirrors :meth:`step_waves`): [q/k/v], [o], [up(/gate)], [down]."""
+        qkv = [t for n in ("wq", "wk", "wv") for t in self._proj[n].tiles]
+        up = list(self._proj["wi"].tiles)
+        if self.gated:
+            up += self._proj["wg"].tiles
+        return [qkv, list(self._proj["wo"].tiles), up,
+                list(self._proj["wo2"].tiles)]
 
     # -- introspection -------------------------------------------------------
     @property
