@@ -200,6 +200,25 @@ def main(smoke: bool = False) -> None:
                   f"compiles={sc['compiles']},buckets={sc['buckets']},"
                   f"matmul_speedup_at4={sc['matmul_speedup_at_4']:.2f}"))
 
+    # -- Wave-scheduler autotuning (DESIGN.md §14) ----------------------------
+    # tune_bench.run sweeps the scheduler's (strategy x chunk skew x
+    # engine assignment x dispatch order) search: every tuned plan must
+    # stay bit-exact vs the uniform plan (sync + async), matmul/conv2d
+    # must win >= 5% modeled wave cycles at tiles in {4, 8}, and the
+    # heterogeneous qrelu tape must ride one genuinely mixed
+    # Caesar+Carus launch wave.
+    from benchmarks import tune_bench
+    t0 = time.perf_counter()
+    rows_tn, mixed = tune_bench.run(sew=8, smoke=smoke)
+    tune_wall_s = time.perf_counter() - t0
+    fails = tune_bench.gate_failures(rows_tn, mixed, tune_bench.BOUND_PCT)
+    assert not fails, "tune gate: " + "; ".join(fails)
+    best_tn = max(r["win_vs_uniform_pct"] for r in rows_tn)
+    lines.append(("nmc_tune", tune_wall_s * 1e6 / max(len(rows_tn), 1),
+                  f"bitexact=True,best_win_pct={best_tn:.2f},"
+                  f"mixed_engines={'+'.join(sorted(set(mixed['engines'])))},"
+                  f"mixed_one_launch={mixed['one_launch']}"))
+
     if not smoke:
         # -- Table VI -------------------------------------------------------
         ok = table_vi.functional_demo()

@@ -1,0 +1,175 @@
+"""Wave-scheduler autotuning benchmark (DESIGN.md §14 acceptance gate).
+
+Sweeps the scheduler's search — partition strategy × per-tile chunk skew
+× per-shard engine assignment × dispatch order, objective
+``timing.wave_cycles`` — over the partition-heavy registry kernels and
+records, per (kernel, tiles), the modeled wave cycles of the seed
+planner, the uniform plan and the tuned plan, plus a functional verdict:
+the tuned schedule must reproduce the uniform plan's output bit-exactly
+through both the synchronous and the asynchronous dispatch path.
+
+The gate (``--smoke`` / ``--assert``) enforces the PR acceptance
+criteria: on **matmul** and **conv2d** at tiles ∈ {4, 8} the tuned plan
+is bit-exact *and* models ≥ ``BOUND_PCT``% fewer wave cycles than the
+uniform plan; and the heterogeneous **qrelu** tape dispatches a
+genuinely mixed Caesar+Carus wave through **one** launch (one
+DispatchQueue wave, one resident dispatch call).
+
+Results append to ``BENCH_tune.json``.
+Run from the repo root: ``PYTHONPATH=src python -m benchmarks.tune_bench``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+BOUND_PCT = 5.0     # tuned must win this much vs uniform on matmul/conv2d
+OUT_JSON = os.path.join(os.path.dirname(__file__), "BENCH_tune.json")
+
+#: (kernel, tiles) pairs the ≥5% bound applies to.
+GATED = tuple((k, t) for k in ("matmul", "conv2d") for t in (4, 8))
+#: Ride-along targets reported but not bound (elementwise kernels have
+#: little skew headroom — their tuned plan must simply never be worse).
+EXTRA = (("mul", 4), ("maxpool", 8))
+
+
+def _measure(name: str, tiles: int, sew: int, rt) -> dict:
+    import numpy as np
+    from benchmarks import scaling
+    from repro import nmc
+
+    kfn, args, _post = scaling.make_kernels(sew, names=(name,))[name]
+    ck = nmc.jit(kfn, tiles=tiles, runtime=rt)
+    t0 = time.perf_counter()
+    tuned = ck.plan_schedule(*args, schedule="auto")
+    tune_ms = (time.perf_counter() - t0) * 1e3   # cold search (cache miss)
+    ref = ck(*args, schedule="uniform")
+    out_sync = ck(*args, schedule="auto")
+    out_async = ck.call_async(*args, schedule="auto").result()
+    bitexact = bool(np.array_equal(ref, out_sync)
+                    and np.array_equal(ref, out_async))
+    win = 100.0 * (tuned.uniform_cycles - tuned.modeled_cycles) \
+        / tuned.uniform_cycles
+    return {"kernel": name, "tiles": tiles, "sew": sew,
+            "strategy": tuned.strategy, "chunks": list(tuned.chunks),
+            "engines": list(tuned.engines), "order": list(tuned.order),
+            "seed_cycles": float(tuned.seed_cycles),
+            "uniform_cycles": float(tuned.uniform_cycles),
+            "tuned_cycles": float(tuned.modeled_cycles),
+            "win_vs_uniform_pct": round(win, 2),
+            "tune_ms": round(tune_ms, 3), "bitexact": bitexact}
+
+
+def _measure_mixed(sew: int) -> dict:
+    """The mixed-engine wave contract on the heterogeneous qrelu tape."""
+    import numpy as np
+    from repro import nmc
+    from repro.core import programs
+
+    kfn, args = programs.qrelu_case(sew)
+    rt = nmc.NmcRuntime()               # fresh counters for the assertion
+    ck = nmc.jit(kfn, tiles=8, partition="rows", runtime=rt)
+    uni = ck.plan_schedule(*args, schedule="uniform")
+    tuned = ck.plan_schedule(*args, schedule="auto")
+    ref = ck(*args, schedule="uniform")
+    q = rt.queue
+    w0, m0, d0 = q.waves, q.mixed_engine_waves, rt.resident.dispatch_calls
+    out = ck(*args, schedule="auto")
+    win = 100.0 * (uni.modeled_cycles - tuned.modeled_cycles) \
+        / uni.modeled_cycles
+    return {"kernel": "qrelu", "tiles": 8, "sew": sew,
+            "engines": list(tuned.engines),
+            "mixed": bool(tuned.mixed),
+            "uniform_cycles": float(uni.modeled_cycles),
+            "tuned_cycles": float(tuned.modeled_cycles),
+            "win_vs_uniform_pct": round(win, 2),
+            "one_launch": bool(q.waves - w0 == 1
+                               and rt.resident.dispatch_calls - d0 == 1),
+            "mixed_waves": int(q.mixed_engine_waves - m0),
+            "bitexact": bool(np.array_equal(ref, out)
+                             and np.array_equal(ref, ck.oracle(*args)))}
+
+
+def run(sew: int = 8, smoke: bool = False) -> tuple[list, dict]:
+    from repro import nmc
+    from repro.nmc import schedule as S
+
+    S.clear_plan_cache()
+    rt = nmc.NmcRuntime()
+    targets = GATED if smoke else GATED + EXTRA
+    rows = [_measure(name, tiles, sew, rt) for name, tiles in targets]
+    mixed = _measure_mixed(sew)
+    return rows, mixed
+
+
+def gate_failures(rows: list, mixed: dict, bound: float) -> list[str]:
+    fails = []
+    for r in rows:
+        tag = f"{r['kernel']}/tiles={r['tiles']}"
+        if not r["bitexact"]:
+            fails.append(f"{tag}: tuned schedule not bit-exact")
+        gated = (r["kernel"], r["tiles"]) in GATED
+        if gated and r["win_vs_uniform_pct"] < bound:
+            fails.append(f"{tag}: win {r['win_vs_uniform_pct']:.2f}% "
+                         f"< {bound}% bound")
+        if not gated and r["tuned_cycles"] > r["uniform_cycles"]:
+            fails.append(f"{tag}: tuned models more cycles than uniform")
+    if not mixed["bitexact"]:
+        fails.append("qrelu: mixed wave not bit-exact")
+    if not mixed["mixed"]:
+        fails.append("qrelu: tuned plan is not mixed-engine")
+    if not mixed["one_launch"] or mixed["mixed_waves"] != 1:
+        fails.append("qrelu: mixed wave did not ride one launch")
+    return fails
+
+
+def main(smoke: bool = False, sew: int = 8, bound: float = BOUND_PCT) -> int:
+    rows, mixed = run(sew=sew, smoke=smoke)
+
+    print(f"{'kernel':<8} {'tiles':>5} {'strategy':<8} "
+          f"{'seed':>8} {'uniform':>8} {'tuned':>8} {'win':>7}  exact")
+    for r in rows:
+        print(f"{r['kernel']:<8} {r['tiles']:>5} {r['strategy']:<8} "
+              f"{r['seed_cycles']:>8.0f} {r['uniform_cycles']:>8.0f} "
+              f"{r['tuned_cycles']:>8.0f} "
+              f"{r['win_vs_uniform_pct']:>6.2f}%  {r['bitexact']}")
+    print(f"qrelu    mixed wave: engines={mixed['engines']} "
+          f"win={mixed['win_vs_uniform_pct']:.2f}% "
+          f"one_launch={mixed['one_launch']} exact={mixed['bitexact']}")
+
+    history = []
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            history = json.load(f)
+    history.append({"ts": time.time(), "sew": sew, "results": rows,
+                    "mixed": mixed})
+    with open(OUT_JSON, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"results appended to {OUT_JSON}")
+
+    failures = gate_failures(rows, mixed, bound)
+    if smoke and failures:
+        print("TUNE BENCH GATE FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    if failures:
+        print("(informational) " + "; ".join(failures))
+    best = max(r["win_vs_uniform_pct"] for r in rows)
+    print(f"gate: best win {best:.2f}% (bound {bound}%), "
+          f"mixed qrelu wave in one launch")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"enforce the gate: matmul/conv2d tuned plans "
+                         f"bit-exact and >= {BOUND_PCT}%% fewer modeled "
+                         f"wave cycles than uniform at tiles 4 and 8, "
+                         f"plus the one-launch mixed qrelu wave")
+    ap.add_argument("--sew", type=int, default=8)
+    ap.add_argument("--bound", type=float, default=BOUND_PCT)
+    a = ap.parse_args()
+    raise SystemExit(main(smoke=a.smoke, sew=a.sew, bound=a.bound))

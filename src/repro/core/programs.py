@@ -211,6 +211,48 @@ def build_axpy(sew: int, caesar_bytes: int = 2 * 1024,
 
 
 # ---------------------------------------------------------------------------
+# Quantized ReLU + unsigned clamp: the registry's heterogeneous kernel
+# ---------------------------------------------------------------------------
+
+def qrelu_case(sew: int, rows: int = 8, row_bytes: int = 128,
+               seed: int = 11) -> tuple:
+    """The qrelu kernel function and its inputs: ``rows`` independent
+    activation rows, all but the last requantized through the affine ReLU
+    ``max(3x + 1, 0)`` (bus-expressible), the last clamped with the
+    *unsigned* ``minu`` cap — an op NM-Caesar's bus ALU does not have
+    (``OpSpec("minu", None, ...)``), so that one row's shard is
+    Carus-only while the rest lower on either engine.  This is the
+    deliberately heterogeneous tape the wave scheduler (DESIGN.md §14)
+    splits into a mixed Caesar+Carus wave.  Returns ``(kfn, args)``."""
+    rng = _rng(seed)
+    n = row_bytes // (sew // 8)
+    X = _rand(rng, (rows, n), sew)
+    cap = (1 << (sew - 2)) - 1       # positive at every SEW; actually clamps
+
+    def kfn(t, X):
+        vals = [t.load(X[r]) for r in range(rows)]
+        for r in range(rows - 1):
+            t.store((vals[r] * 3 + 1).max(0))
+        t.store(vals[rows - 1].minu(cap))
+
+    return kfn, (X,)
+
+
+def build_qrelu(sew: int, rows: int = 8, row_bytes: int = 128,
+                seed: int = 11) -> KernelBuild:
+    """Single-tile registry build of :func:`qrelu_case`.  The whole tape
+    is Carus-only (the ``minu`` row), so ``caesar`` is ``None`` — Table V
+    sweeps exclude it (no paper CPU baseline); it exists for the
+    heterogeneous scheduling path, where the *rows-split* wave runs its
+    bus-expressible shards on Caesar."""
+    kfn, args = qrelu_case(sew, rows=rows, row_bytes=row_bytes, seed=seed)
+    eb, oracle = _traced_build(kfn, args, "carus", sew)
+    eb.oracle, eb.n_outputs = oracle, oracle.size
+    eb.engine, eb.sew = "carus", sew
+    return KernelBuild("qrelu", sew, oracle.size, oracle, None, eb)
+
+
+# ---------------------------------------------------------------------------
 # Matmul / GEMM:  A[8,8] x B[8,P]  (Table V footnotes b, c)
 # ---------------------------------------------------------------------------
 
@@ -369,6 +411,8 @@ def build(name: str, sew: int, **kw) -> KernelBuild:
         return build_maxpool(sew, **kw)
     if name == "axpy":
         return build_axpy(sew, **kw)
+    if name == "qrelu":
+        return build_qrelu(sew, **kw)
     raise KeyError(name)
 
 
@@ -380,6 +424,11 @@ TABLE_V_KERNELS = ("xor", "add", "mul", "matmul", "gemm", "conv2d", "relu",
 # deliberately naive — it exhibits the slack opt="O1" reclaims — and has no
 # paper CPU baseline, so Table V sweeps exclude it)
 ALL_KERNELS = TABLE_V_KERNELS + ("axpy",)
+# kernels whose tape is deliberately heterogeneous (some store cones
+# bus-expressible, some Carus-only) — built for the mixed-engine wave
+# scheduler (DESIGN.md §14); excluded from ALL_KERNELS sweeps because
+# they carry no per-engine build pair (qrelu's ``caesar`` is None)
+HETERO_KERNELS = ("qrelu",)
 
 
 # ---------------------------------------------------------------------------

@@ -266,7 +266,25 @@ def sweep_dispatch_cycles(builds: list, mode: str = "serial") -> float:
 # Multi-tile system cost model: one shared bus, N overlapped tiles
 # ---------------------------------------------------------------------------
 
-def chained_wave_cycles(waves: list[list[StageCost]], n_tiles: int) -> float:
+#: Stage -> tile placement policies of the multi-tile wave models:
+#: ``"roundrobin"`` pins stage ``i`` to tile ``i % n_tiles`` (the dispatch
+#: order the runtime uses), ``"greedy"`` places each stage on the
+#: least-loaded tile at its DMA-arrival time (a free tile never idles
+#: behind a busy one just because of its index).
+ASSIGN_MODES = ("roundrobin", "greedy")
+
+
+def _place_stage(i: int, tile_free: list, assign: str) -> int:
+    """Tile index for stage ``i`` under the given placement policy."""
+    if assign == "roundrobin":
+        return i % len(tile_free)
+    # greedy: earliest-free tile; ties resolve to the lowest index, so the
+    # policy is deterministic and degenerates to roundrobin on fresh tiles
+    return min(range(len(tile_free)), key=lambda t: (tile_free[t], t))
+
+
+def chained_wave_cycles(waves: list[list[StageCost]], n_tiles: int,
+                        assign: str = "roundrobin") -> float:
     """Makespan of a *chain* of dependent partitioned waves on one
     ``n_tiles`` array — the resident-block serving shape (DESIGN.md §12):
     wave ``w+1`` consumes wave ``w``'s outputs, so its input DMA cannot
@@ -283,15 +301,22 @@ def chained_wave_cycles(waves: list[list[StageCost]], n_tiles: int) -> float:
     * the chain is never cheaper than its longest wave, and never costs
       more than running the waves back-to-back with cold timelines
       (``sum(wave_cycles(w, n) for w in waves)``).
+
+    ``assign`` picks the stage->tile placement (:data:`ASSIGN_MODES`):
+    ``"roundrobin"`` pins stage ``i`` to tile ``i % n_tiles``;
+    ``"greedy"`` places each stage on the least-loaded tile at its
+    DMA-arrival time — never worse than roundrobin when stages outnumber
+    tiles, identical when they don't (each stage gets a fresh tile).
     """
     n_tiles = int(n_tiles)
     assert n_tiles >= 1, n_tiles
+    assert assign in ASSIGN_MODES, assign
     bus = 0.0                          # shared system-bus timeline
     tile_free = [0.0] * n_tiles        # per-tile compute timelines
     for stages in waves:
         comp_end: list[float] = []
         for i, s in enumerate(stages):     # images/patches stream in
-            t = i % n_tiles
+            t = _place_stage(i, tile_free, assign)
             bus += s.dma_in_cycles
             tile_free[t] = max(bus, tile_free[t]) + s.compute_cycles
             comp_end.append(tile_free[t])
@@ -301,7 +326,8 @@ def chained_wave_cycles(waves: list[list[StageCost]], n_tiles: int) -> float:
 
 
 def wave_cycles(stages, n_tiles: int,
-                mode: str = "overlapped") -> float:
+                mode: str = "overlapped",
+                assign: str = "roundrobin") -> float:
     """Makespan of one partitioned wave on an ``n_tiles`` tile array.
 
     The paper's edge-node topology hangs every tile's SRAM macro off one
@@ -323,12 +349,18 @@ def wave_cycles(stages, n_tiles: int,
     ``"chained"`` accepts a list of *waves* (each a list of StageCosts)
     and delegates to :func:`chained_wave_cycles` — the cost of dependent
     back-to-back waves whose activations hop tile-to-tile over the bus.
+
+    ``assign`` picks the stage->tile placement (:data:`ASSIGN_MODES`):
+    ``"roundrobin"`` (default) models the runtime's dispatch order,
+    ``"greedy"`` the least-loaded placement a work-stealing host would
+    use — the two differ only when stages outnumber tiles.
     """
     assert mode in ("serial", "overlapped", "chained"), mode
     if mode == "chained":
-        return chained_wave_cycles(stages, n_tiles)
+        return chained_wave_cycles(stages, n_tiles, assign=assign)
     n_tiles = int(n_tiles)
     assert n_tiles >= 1, n_tiles
+    assert assign in ASSIGN_MODES, assign
     if not stages:
         return 0.0
     if mode == "serial":
@@ -337,7 +369,7 @@ def wave_cycles(stages, n_tiles: int,
     tile_free = [0.0] * n_tiles        # per-tile compute timelines
     comp_end: list[float] = []
     for i, s in enumerate(stages):     # images stream in, bus-serialized
-        t = i % n_tiles
+        t = _place_stage(i, tile_free, assign)
         bus += s.dma_in_cycles
         tile_free[t] = max(bus, tile_free[t]) + s.compute_cycles
         comp_end.append(tile_free[t])

@@ -42,6 +42,12 @@ Layers (each usable directly for expert control):
   (DESIGN.md §9): shards one traced kernel across the tile array
   (``nmc.jit(fn, tiles=N)``), reassembled by :class:`GatherFuture` —
   bit-exact vs the single-tile path by construction.
+* :mod:`repro.nmc.schedule` — the cost-model-driven wave scheduler and
+  plan autotuner (DESIGN.md §14): searches partition strategy × chunk
+  skew × per-shard engine assignment × dispatch order against
+  :func:`repro.core.timing.wave_cycles`
+  (``nmc.jit(fn, tiles=N, schedule="auto")``), caching winning
+  :class:`SchedulePlan` objects in a content-keyed blake2b-LRU registry.
 """
 
 from repro.nmc.program import (PROG_DTYPE, Program, caesar_entry, carus_entry,
@@ -59,6 +65,8 @@ from repro.nmc.frontend import (CompiledKernel, LoweredKernel, LoweringError,
                                 select_engine)
 from repro.nmc.partition import (PartitionError, PartitionPlan, slide_halo,
                                  plan as plan_partition)
+from repro.nmc.schedule import (SCHEDULE_MODES, SchedulePlan, autotune,
+                                clear_plan_cache, plan_wave, uniform_plan)
 from repro.nmc.check import (CHECK_MODES, CheckReport, Diagnostic,
                              VerificationError, assert_submittable,
                              assert_wave, verify_chained_waves,
@@ -81,6 +89,9 @@ __all__ = [
     "OPT_LEVELS", "OptError", "OptReport", "RewriteRecord", "optimize",
     # tile-parallel partitioning planner (DESIGN.md §9)
     "plan_partition", "PartitionPlan", "PartitionError",
+    # wave scheduler + plan autotuner (DESIGN.md §14)
+    "SCHEDULE_MODES", "SchedulePlan", "autotune", "uniform_plan",
+    "plan_wave", "clear_plan_cache",
     # shared execution runtime
     "NmcRuntime", "default_runtime", "set_default_runtime",
     # unified program IR

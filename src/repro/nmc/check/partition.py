@@ -74,9 +74,12 @@ def verify_plan(parent, plan, kernel: Optional[str] = None) -> CheckReport:
 def verify_wave(parent, plan, lks: Sequence,
                 kernel: Optional[str] = None) -> CheckReport:
     """Partition safety + per-shard verification of a lowered wave,
-    including the common-bucket padding contract: every shard program must
-    sit at one shared instruction count with verifier-neutral NOP tails
-    (the structural nop-not-neutral rule covers the tails)."""
+    including the common-bucket padding contract: every shard program of
+    one *engine group* must sit at one shared instruction count with
+    verifier-neutral NOP tails (the structural nop-not-neutral rule
+    covers the tails).  A mixed-engine wave (DESIGN.md §14) legitimately
+    carries one bucket per engine — Caesar and Carus programs never share
+    a compile bucket — so agreement is checked per group."""
     # facade-level import: verify_lowered (and its memo) live in the
     # package __init__, which re-exports this module — defer to avoid the
     # cycle
@@ -85,12 +88,15 @@ def verify_wave(parent, plan, lks: Sequence,
     report = verify_plan(parent, plan, kernel=target)
     ctx = _Ctx(kernel=target, out_slice=None, init_spans=None,
                used_words=0, prov=None, diags=report.diagnostics)
-    sizes = {lk.program.n_instr for lk in lks}
-    if len(sizes) > 1:
-        ctx.emit("error", "partition", "wave-bucket-mismatch",
-                 f"shard programs pad to different instruction counts "
-                 f"{sorted(sizes)} — the wave would split into several "
-                 f"compile buckets")
+    by_engine: dict = {}
+    for lk in lks:
+        by_engine.setdefault(lk.engine, set()).add(lk.program.n_instr)
+    for eng, sizes in sorted(by_engine.items()):
+        if len(sizes) > 1:
+            ctx.emit("error", "partition", "wave-bucket-mismatch",
+                     f"{eng} shard programs pad to different instruction "
+                     f"counts {sorted(sizes)} — the engine group would "
+                     f"split into several compile buckets")
     for i, lk in enumerate(lks):
         report.extend(verify_lowered(lk, kernel=f"{target}[shard {i}]"))
     return report

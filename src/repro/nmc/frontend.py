@@ -1143,6 +1143,20 @@ def _check_checkmode(check: str) -> str:
     return check
 
 
+def _check_schedule(schedule):
+    """Validate a ``schedule=`` argument: a mode name or an explicit
+    :class:`repro.nmc.schedule.SchedulePlan` (deferred import — the
+    scheduler builds on this module)."""
+    from repro.nmc.schedule import SCHEDULE_MODES, SchedulePlan
+    if isinstance(schedule, SchedulePlan):
+        return schedule
+    if schedule not in SCHEDULE_MODES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}: expected a SchedulePlan or "
+            f"one of {SCHEDULE_MODES}")
+    return schedule
+
+
 def _check_opt(opt: str) -> str:
     """Eager opt-level validation (same discipline as
     :func:`_check_engine`): ``"O1"`` or ``"off"``."""
@@ -1177,7 +1191,8 @@ class CompiledKernel:
     def __init__(self, fn: Callable, engine: str = "auto", sew: int = 8,
                  runtime: Optional[NmcRuntime] = None, tiles: int = 1,
                  partition: str = "auto", backend: str = "auto",
-                 check: str = "error", opt: str = "O1"):
+                 check: str = "error", opt: str = "O1",
+                 schedule="uniform"):
         # kwargs validate eagerly: a typo'd engine string or an impossible
         # tile count must fail at decoration time with a named cause, not
         # as a deep-stack assertion at first call
@@ -1185,6 +1200,7 @@ class CompiledKernel:
         _check_backend(backend)
         _check_checkmode(check)
         _check_opt(opt)
+        _check_schedule(schedule)
         if sew not in alu.SEWS:
             raise ValueError(
                 f"unsupported sew {sew!r}: expected one of "
@@ -1202,6 +1218,7 @@ class CompiledKernel:
         self.backend = backend
         self.check = check
         self.opt = opt
+        self.schedule = schedule
         self._runtime = runtime
         self.__name__ = getattr(fn, "__name__", "kernel")
         self.__doc__ = getattr(fn, "__doc__", None)
@@ -1232,6 +1249,9 @@ class CompiledKernel:
 
     def _opt_level(self, opt: Optional[str]) -> str:
         return self.opt if opt is None else _check_opt(opt)
+
+    def _schedule_mode(self, schedule):
+        return self.schedule if schedule is None else _check_schedule(schedule)
 
     def lower(self, *args, engine: Optional[str] = None,
               sew: Optional[int] = None,
@@ -1268,22 +1288,36 @@ class CompiledKernel:
         n = self.tiles if tiles is None else _check_tiles(tiles)
         return P.plan(self.trace(*args, sew=sew), n, self.partition)
 
+    def plan_schedule(self, *args, tiles: Optional[int] = None,
+                      engine: Optional[str] = None, schedule=None):
+        """Trace the kernel and return the :class:`SchedulePlan` the wave
+        scheduler picks for it (DESIGN.md §14) — cached, so a following
+        call/``lower_wave`` with the same policy reuses the search."""
+        from repro.nmc import schedule as S
+        n = self.tiles if tiles is None else _check_tiles(tiles)
+        eng = _check_engine(engine) if engine is not None else self.engine
+        mode = self._schedule_mode(schedule)
+        return S.plan_wave(self.trace(*args), n, partition=self.partition,
+                           engine=eng, mode=mode)[0]
+
     def lower_wave(self, *args, engine: Optional[str] = None,
                    tiles: Optional[int] = None,
                    check: Optional[str] = None,
-                   opt: Optional[str] = None):
-        """Lower a partitioned wave: returns ``(plan, lowered_shards)``
-        with every shard program NOP-padded to the wave's common
-        instruction bucket, so the whole wave lands in **one** bucketed
-        group — one XLA compile, one batched dispatch across the tiles."""
-        pplan = self.plan_partition(*args, tiles=tiles)
+                   opt: Optional[str] = None,
+                   schedule=None):
+        """Lower a scheduled wave: returns ``(plan, lowered_shards)`` in
+        dispatch order, with every shard program NOP-padded to its
+        *engine group's* common instruction bucket — a single-engine wave
+        lands in one bucketed group (one XLA compile, one batched
+        dispatch) exactly as before, while a mixed Caesar+Carus wave pads
+        per engine so each group batches on its own interpreter."""
+        from repro.nmc import schedule as S
+        n = self.tiles if tiles is None else _check_tiles(tiles)
         eng = _check_engine(engine) if engine is not None else self.engine
-        if eng == "auto":
-            # select on the first (largest) shard: partitioning can only
-            # relax engine constraints (smaller vectors, same ops), so the
-            # head shard's choice holds for the whole wave
-            eng = select_engine(pplan.builders[0])
-        lks = [_LOWERINGS[eng](sb).lower() for sb in pplan.builders]
+        mode = self._schedule_mode(schedule)
+        splan, pplan, lks = S.plan_wave(
+            self.trace(*args), n, partition=self.partition, engine=eng,
+            mode=mode)
         level = self._opt_level(opt)
         if level != "off":
             # shards optimize *before* the common-bucket agreement: a
@@ -1291,29 +1325,34 @@ class CompiledKernel:
             from repro.nmc import opt as _opt
             for lk in lks:
                 _opt.optimize(lk, level)
-        bucket = instr_bucket(max(lk.program.n_instr for lk in lks))
-        for lk in lks:
-            lk.pad_to(bucket)
-        mode = self._check_mode(check)
-        if mode != "off":
+        for group in sorted({lk.engine for lk in lks}):
+            members = [lk for lk in lks if lk.engine == group]
+            bucket = instr_bucket(max(lk.program.n_instr
+                                      for lk in members))
+            for lk in members:
+                lk.pad_to(bucket)
+        cmode = self._check_mode(check)
+        if cmode != "off":
             # partition safety + per-shard verification, over the *padded*
             # shard programs — the exact wave the scheduler will dispatch
             from repro.nmc import check as _chk
             _apply_report(_chk.verify_wave(pplan.parent, pplan, lks,
-                                           kernel=self.__name__), mode)
+                                           kernel=self.__name__), cmode)
         return pplan, lks
 
     # -- execution -----------------------------------------------------------
     def __call__(self, *args, engine: Optional[str] = None,
                  tiles: Optional[int] = None,
                  backend: Optional[str] = None,
-                 opt: Optional[str] = None) -> np.ndarray:
+                 opt: Optional[str] = None,
+                 schedule=None) -> np.ndarray:
         """Synchronous call: submit and resolve immediately.  Shares the
         async path's tiles and jit cache, so sync and async are bit-exact
         by construction and device state stays bounded (one resident
         buffer per runtime tile, re-installed per call)."""
         return self.call_async(*args, engine=engine, tiles=tiles,
-                               backend=backend, opt=opt).result()
+                               backend=backend, opt=opt,
+                               schedule=schedule).result()
 
     def resolve_backend(self, backend: Optional[str] = None) -> str:
         """The executor this call will use: per-call override > kernel
@@ -1329,7 +1368,8 @@ class CompiledKernel:
     def call_async(self, *args, engine: Optional[str] = None,
                    tiles: Optional[int] = None,
                    backend: Optional[str] = None,
-                   opt: Optional[str] = None):
+                   opt: Optional[str] = None,
+                   schedule=None):
         """Submit through the runtime's DispatchQueue; returns the future
         immediately (double-buffered staging, batched launch waves).
 
@@ -1353,7 +1393,8 @@ class CompiledKernel:
                                    out_slice=lk.out_slice, post=lk.post,
                                    backend=bk)
         from repro.nmc.runtime import GatherFuture
-        pplan, lks = self.lower_wave(*args, engine=engine, tiles=n, opt=opt)
+        pplan, lks = self.lower_wave(*args, engine=engine, tiles=n, opt=opt,
+                                     schedule=schedule)
         futs = [rt.queue.submit(tile, lk.program, image=lk.mem,
                                 out_slice=lk.out_slice, post=lk.post,
                                 backend=bk)
@@ -1364,7 +1405,7 @@ class CompiledKernel:
 def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
         runtime: Optional[NmcRuntime] = None, tiles: int = 1,
         partition: str = "auto", backend: str = "auto",
-        check: str = "error", opt: str = "O1"):
+        check: str = "error", opt: str = "O1", schedule="uniform"):
     """Compile a traced kernel function into a :class:`CompiledKernel`.
 
     ``engine`` is ``"auto"`` (NM-Caesar when bus-expressible, NM-Carus
@@ -1384,17 +1425,24 @@ def jit(fn: Optional[Callable] = None, *, engine: str = "auto", sew: int = 8,
     (:mod:`repro.nmc.opt`, DESIGN.md §13) on every lowered program:
     ``"O1"`` (default — translation-validated rewrites: dead-write
     elimination, NOP/VSETVL compaction, bank-conflict-aware placement,
-    copy coalescing) or ``"off"``; both are overridable per call.  All
-    kwargs validate eagerly with ``ValueError``.  Usable as a decorator
-    (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``) or a call."""
+    copy coalescing) or ``"off"``; both are overridable per call.
+    ``schedule`` picks the wave scheduler (:mod:`repro.nmc.schedule`,
+    DESIGN.md §14): ``"uniform"`` (default — seed strategy and engine,
+    cost-picked uniform chunking and tail placement), ``"auto"`` (the
+    full autotuner: chunk skew, per-shard engine mix, dispatch order) or
+    an explicit :class:`repro.nmc.schedule.SchedulePlan`; overridable
+    per call.  All kwargs validate eagerly with ``ValueError``.  Usable
+    as a decorator (``@nmc.jit`` / ``@nmc.jit(engine="carus", tiles=4)``)
+    or a call."""
     if fn is None:
         return lambda f: CompiledKernel(f, engine=engine, sew=sew,
                                         runtime=runtime, tiles=tiles,
                                         partition=partition, backend=backend,
-                                        check=check, opt=opt)
+                                        check=check, opt=opt,
+                                        schedule=schedule)
     return CompiledKernel(fn, engine=engine, sew=sew, runtime=runtime,
                           tiles=tiles, partition=partition, backend=backend,
-                          check=check, opt=opt)
+                          check=check, opt=opt, schedule=schedule)
 
 
 def kernel(fn: Optional[Callable] = None, **options):

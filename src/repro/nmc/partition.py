@@ -22,8 +22,12 @@ and how stores trim.  Two strategies:
   computes) shares one data-parallel element axis, which splits into
   word-aligned chunks — elementwise/relu streams, conv/maxpool output
   columns.  ``slide_down`` reads ahead by its amount, so each shard's
-  loads carry a *halo* of ``max`` cumulative slide depth; the ragged tail
-  always lands on the last shard.
+  loads carry a *halo* of ``max`` cumulative slide depth.  By default
+  chunks are ceil-packed with the ragged tail on the last shard (the
+  seed behavior); callers may pass an explicit ``chunks=`` vector —
+  arbitrary positive element counts, word-aligned or not — which is how
+  the wave scheduler (:mod:`repro.nmc.schedule`, DESIGN.md §14) realizes
+  skewed and cost-arbitrated splits.
 
 ``partition="auto"`` picks ``rows`` when the stores distribute evenly and
 the tape has no slides (slides are column-structured), otherwise ``axis``,
@@ -42,7 +46,7 @@ the caller's array with the same shaping rule the single-tile path uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -104,6 +108,21 @@ class PartitionPlan:
     def shard_oracles(self) -> List[np.ndarray]:
         """Each shard's traced reference output (eager numpy evaluation)."""
         return [b.oracle() for b in self.builders]
+
+    def reordered(self, order: Sequence[int]) -> "PartitionPlan":
+        """The same plan with shards permuted into dispatch order
+        (``order[k]`` = which shard dispatches k-th).  Gather scatters by
+        piece ranges, so any permutation reassembles bit-exactly; the
+        scheduler uses this to put shards where the bus-serialized DMA
+        ladder reaches them just in time."""
+        perm = tuple(int(i) for i in order)
+        assert sorted(perm) == list(range(self.n_shards)), \
+            (perm, self.n_shards)
+        return PartitionPlan(self.strategy, self.sew,
+                             [self.builders[i] for i in perm],
+                             [self.pieces[i] for i in perm],
+                             list(self.store_trims), self.requested_tiles,
+                             parent=self.parent)
 
     def gather(self, shard_outs: List[np.ndarray]) -> np.ndarray:
         """Reassemble per-shard outputs into the unsharded kernel's output:
@@ -198,18 +217,42 @@ def _cone(b: ProgramBuilder, roots: List[_Node]) -> set:
     return seen
 
 
-def _plan_rows(b: ProgramBuilder, tiles: int) -> PartitionPlan:
+def _check_chunks(b: ProgramBuilder, chunks, total: int, tiles: int,
+                  what: str) -> Tuple[int, ...]:
+    """Validate an explicit per-shard chunk vector: positive entries that
+    exactly cover ``total`` with at most ``tiles`` shards."""
+    vec = tuple(int(c) for c in chunks)
+    if not vec or any(c <= 0 for c in vec):
+        raise PartitionError(
+            f"{b.name}: explicit {what} chunk vector must be non-empty "
+            f"with positive entries, got {vec}")
+    if sum(vec) != total:
+        raise PartitionError(
+            f"{b.name}: explicit {what} chunk vector {vec} sums to "
+            f"{sum(vec)}, must exactly cover {total}")
+    if len(vec) > tiles:
+        raise PartitionError(
+            f"{b.name}: explicit {what} chunk vector has {len(vec)} "
+            f"shards for {tiles} tiles")
+    return vec
+
+
+def _plan_rows(b: ProgramBuilder, tiles: int,
+               counts: Optional[Sequence[int]] = None) -> PartitionPlan:
     S = len(b.stores)
     if S < 2:
         raise PartitionError(
             f"{b.name}: rows split needs >= 2 stores, tape has {S} — use "
             f"the element-axis strategy for single-output kernels")
-    n = min(tiles, S)
-    q, r = divmod(S, n)
+    if counts is not None:
+        counts = _check_chunks(b, counts, S, tiles, "rows")
+    else:
+        n = min(tiles, S)
+        q, r = divmod(S, n)
+        counts = tuple(q + (1 if s < r else 0) for s in range(n))
     builders, pieces = [], []
     off = 0
-    for s in range(n):
-        count = q + (1 if s < r else 0)
+    for count in counts:
         sel = [(si, 0, b.stores[si][1]) for si in range(off, off + count)]
         keep = _cone(b, [b.stores[si][0] for si, _, _ in sel])
         builders.append(_replay(b, keep, lambda nd: (0, nd.ne), sel))
@@ -241,7 +284,39 @@ def slide_halo(b: ProgramBuilder) -> int:
 _slide_halo = slide_halo
 
 
-def _plan_axis(b: ProgramBuilder, tiles: int) -> PartitionPlan:
+def uniform_axis_chunks(L: int, tiles: int, lanes: int) -> Tuple[int, ...]:
+    """The seed uniform chunking: ceil-packed word-aligned chunks, ragged
+    tail last.  May occupy fewer shards than tiles when the word count
+    does not divide (e.g. 9 words on 8 tiles -> [2,2,2,2,1] words)."""
+    words_total = -(-L // lanes)
+    words_per = -(-words_total // tiles)
+    chunk = words_per * lanes
+    out, lo = [], 0
+    while lo < L:
+        hi = min(lo + chunk, L)
+        out.append(hi - lo)
+        lo = hi
+    return tuple(out)
+
+
+def balanced_axis_chunks(L: int, tiles: int, lanes: int) -> Tuple[int, ...]:
+    """Balanced word-aligned chunking: spread the word remainder across
+    the first shards (divmod, largest first) so every requested tile gets
+    work — the cost-model-preferred alternative the scheduler weighs
+    against the ceil-packed seed chunking."""
+    words_total = -(-L // lanes)
+    n = min(tiles, words_total)
+    q, r = divmod(words_total, n)
+    out, lo = [], 0
+    for s in range(n):
+        hi = min(lo + (q + (1 if s < r else 0)) * lanes, L)
+        out.append(hi - lo)
+        lo = hi
+    return tuple(c for c in out if c > 0)
+
+
+def _plan_axis(b: ProgramBuilder, tiles: int,
+               chunks: Optional[Sequence[int]] = None) -> PartitionPlan:
     vec = [n for n in b.nodes if n.op != "cpool"]
     nes = {n.ne for n in vec}
     if len(nes) != 1:
@@ -256,16 +331,18 @@ def _plan_axis(b: ProgramBuilder, tiles: int) -> PartitionPlan:
             f"({sorted(trims)}): cannot split one element axis")
     L = trims.pop()
     lanes = 32 // b.sew
-    # word-aligned chunks: every shard but the last covers a whole number
-    # of memory words, so shard programs differ only in the ragged tail
-    words_total = -(-L // lanes)
-    words_per = -(-words_total // tiles)
-    chunk = words_per * lanes
+    if chunks is not None:
+        chunks = _check_chunks(b, chunks, L, tiles, "axis")
+    else:
+        # word-aligned chunks: every shard but the last covers a whole
+        # number of memory words, so shard programs differ only in the
+        # ragged tail
+        chunks = uniform_axis_chunks(L, tiles, lanes)
     halo = slide_halo(b)
     builders, pieces = [], []
     lo = 0
-    while lo < L:
-        hi = min(lo + chunk, L)
+    for c in chunks:
+        hi = lo + c
         end = min(hi + halo, ne)
         builders.append(_replay(
             b, {n.idx for n in b.nodes},
@@ -282,7 +359,8 @@ def _plan_axis(b: ProgramBuilder, tiles: int) -> PartitionPlan:
 # ---------------------------------------------------------------------------
 
 def plan(builder: ProgramBuilder, tiles: int,
-         partition: str = "auto") -> PartitionPlan:
+         partition: str = "auto",
+         chunks: Optional[Sequence[int]] = None) -> PartitionPlan:
     """Shard a traced tape across ``tiles`` tiles.
 
     ``partition`` is ``"auto"`` (rows when the stores distribute evenly
@@ -290,7 +368,14 @@ def plan(builder: ProgramBuilder, tiles: int,
     strategy), ``"rows"`` or ``"axis"``.  The plan may hold fewer shards
     than requested when the tape is too small (a 3-element vector cannot
     occupy 8 tiles); it never holds more.  ``tiles=1`` returns the
-    original tape as a single trivial shard."""
+    original tape as a single trivial shard.
+
+    ``chunks`` (optional) is an explicit per-shard chunk vector — element
+    counts for ``"axis"``, store counts for ``"rows"`` — the scheduler's
+    skewed split points.  It must name an explicit strategy (the vector's
+    meaning depends on it) and exactly cover the axis/store set
+    (:class:`PartitionError` otherwise; the partition-safety verifier
+    re-checks coverage and halos on the built plan)."""
     if partition not in STRATEGIES:
         raise ValueError(f"unknown partition strategy {partition!r}: "
                          f"expected one of {STRATEGIES}")
@@ -298,15 +383,20 @@ def plan(builder: ProgramBuilder, tiles: int,
     if not builder.stores:
         raise PartitionError(f"{builder.name}: tape has no stores — "
                              f"nothing to shard")
+    if chunks is not None and partition == "auto" and tiles > 1:
+        raise ValueError(
+            "an explicit chunk vector needs an explicit partition "
+            "strategy ('rows' or 'axis'): the vector's meaning — store "
+            "counts vs element counts — depends on it")
     if tiles == 1:
         pieces = [[(si, 0, t) for si, (_, t) in enumerate(builder.stores)]]
         return PartitionPlan("single", builder.sew, [builder], pieces,
                              [t for _, t in builder.stores], tiles,
                              parent=builder)
     if partition == "rows":
-        return _plan_rows(builder, tiles)
+        return _plan_rows(builder, tiles, counts=chunks)
     if partition == "axis":
-        return _plan_axis(builder, tiles)
+        return _plan_axis(builder, tiles, chunks=chunks)
     # auto: prefer structurally-identical row shards (same program on every
     # tile, trivially one bucket) when stores distribute evenly; slides are
     # column-structured (conv's shifted replicas), so their presence routes

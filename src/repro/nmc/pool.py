@@ -235,6 +235,7 @@ class ResidentPool:
         self.loads = 0
         self.stores = 0
         self.dispatches = 0
+        self.dispatch_calls = 0      # dispatch() invocations (launch waves)
         self.programs_run = 0
         self.bytes_moved = 0
         self.patches = 0             # partial memory-mode writes (word spans)
@@ -319,7 +320,13 @@ class ResidentPool:
 
         One dispatch is one parallel step across the tile array, so a tile
         may appear at most once per call — chained programs on one tile are
-        sequential ``dispatch`` calls (each sees the previous final state)."""
+        sequential ``dispatch`` calls (each sees the previous final state).
+        A mixed-engine wave (DESIGN.md §14) rides one call: its Caesar and
+        Carus shards fall into separate bucket-key groups below (the
+        bucket key carries the engine), each batched on its own
+        interpreter, but they remain one parallel step — ``dispatch_calls``
+        counts the steps, ``dispatches`` the per-group executions."""
+        self.dispatch_calls += 1
         seen = set()
         by_key: dict[tuple, list[tuple]] = {}
         for tile, prog in assignments:

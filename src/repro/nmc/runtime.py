@@ -221,6 +221,7 @@ class DispatchQueue:
         self.launched = 0
         self.resolved = 0
         self.waves = 0
+        self.mixed_engine_waves = 0     # waves mixing Caesar+Carus shards
         self.staged_while_busy = 0
         self.calls = 0
 
@@ -323,6 +324,11 @@ class DispatchQueue:
             it.future._final = self.pool.state(it.tile)
         self.launched += len(wave)
         self.waves += 1
+        if len({it.program.engine for it in wave}) > 1:
+            # a heterogeneous wave (DESIGN.md §14): Caesar and Carus
+            # shards launched together; the pool batches per engine
+            # bucket group inside the one dispatch
+            self.mixed_engine_waves += 1
 
     def drain(self) -> None:
         """Flush and resolve every outstanding future (chained per-tile

@@ -1,0 +1,314 @@
+"""Wave scheduler + plan autotuner (repro.nmc.schedule, DESIGN.md §14).
+
+* **Chunk-vector properties** (hypothesis, or the deterministic vendored
+  shim when it is absent): arbitrary valid split points — word-aligned or
+  not, with and without slide halos — gather bit-exactly vs the
+  single-tile oracle, at every SEW and on both engines.
+* **Plan registry**: cache hits return the *identical* SchedulePlan
+  object across re-traces with fresh values; the key is structural.
+* **Uniform-mode regression**: the cost model places the ragged tail /
+  picks the remainder spread — an uneven matmul models strictly fewer
+  wave cycles than the seed planner's ceil-packed tail-last behavior.
+* **Autotuning**: tuned plans are bit-exact vs uniform (sync + async)
+  and never model more cycles; the heterogeneous qrelu tape dispatches a
+  genuinely mixed Caesar+Carus wave through one launch.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro import nmc
+from repro.core import alu, programs
+from repro.nmc import partition as P
+from repro.nmc import schedule as S
+
+SEWS = (8, 16, 32)
+RNG = np.random.default_rng(13)
+
+# one shared runtime for the module: every executed wave shares a jit cache
+_RT = nmc.NmcRuntime()
+
+
+def _rand(shape, sew, rng=RNG):
+    info = np.iinfo(alu.NP_DTYPES[sew])
+    return rng.integers(info.min, info.max + 1, shape,
+                        dtype=alu.NP_DTYPES[sew])
+
+
+def _random_chunks(rng, total, tiles):
+    """A random valid chunk vector: positive entries summing to ``total``,
+    at most ``tiles`` of them, arbitrary (non-word-aligned) split points."""
+    n = int(rng.integers(1, min(tiles, total) + 1))
+    cuts = sorted(rng.choice(np.arange(1, total), size=n - 1,
+                             replace=False).tolist()) if n > 1 else []
+    edges = [0] + list(cuts) + [total]
+    return tuple(int(b - a) for a, b in zip(edges, edges[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Chunk-vector properties (planner level)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 400), st.integers(1, 9), st.sampled_from(SEWS),
+       st.integers(0, 3), st.integers(0, 2 ** 31))
+def test_arbitrary_chunk_vectors_gather_bit_exact(n, tiles, sew, amount,
+                                                  seed):
+    """Any valid chunk vector — including ragged, non-word-aligned split
+    points and slide read-ahead — partitions the stores exactly and the
+    gathered shard oracles equal the single-tile oracle bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(n, sew, rng), _rand(n, sew, rng)
+
+    def kfn(t, x, y):
+        v = t.load(x, bank=0)
+        if amount:
+            v = nmc.mac(v.slide_down(amount), 2, v)
+        t.store((v * 3 + t.load(y)).max(0))
+
+    b = nmc.jit(kfn, sew=sew).trace(x, y)
+    chunks = _random_chunks(rng, n, tiles)
+    pl = P.plan(b, tiles, partition="axis", chunks=chunks)
+    assert pl.n_shards == len(chunks)
+    assert (pl.oracle() == b.oracle()).all()
+    # the partition-safety verifier accepts every valid skewed plan
+    rep = nmc.verify_plan(b, pl)
+    assert not rep.errors, rep.render()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(("caesar", "carus")), st.sampled_from(SEWS),
+       st.integers(0, 2), st.integers(0, 2 ** 31))
+def test_user_schedule_plans_execute_bit_exact(engine, sew, amount, seed):
+    """A user-supplied SchedulePlan with random skewed chunks executes
+    bit-exactly vs the traced oracle on both engines at every SEW."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(16, 120))
+    x = _rand(n, sew, rng)
+
+    def kfn(t, x):
+        v = t.load(x)
+        if amount:
+            v = nmc.mac(v.slide_down(amount), 2, v)
+        t.store((v * 3 + 1).max(0))
+
+    tiles = 4
+    chunks = _random_chunks(rng, n, tiles)
+    splan = S.SchedulePlan("axis", chunks, (engine,) * len(chunks),
+                           tuple(range(len(chunks))), tiles, sew,
+                           0.0, 0.0, 0.0, "user")
+    ck = nmc.jit(kfn, sew=sew, tiles=tiles, runtime=_RT, schedule=splan)
+    assert np.array_equal(ck(x), ck.oracle(x))
+
+
+# ---------------------------------------------------------------------------
+# Plan registry
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_returns_identical_object():
+    """The registry key is the value-independent tape structure: re-calls
+    with fresh activation values hit the cache and return the *same*
+    SchedulePlan object; a different policy or structure misses."""
+    S.clear_plan_cache()
+
+    def kfn(t, x):
+        t.store((t.load(x) * 3 + 1).max(0))
+
+    ck = nmc.jit(kfn, tiles=4, runtime=_RT)
+    b1 = ck.trace(_rand(100, 8))
+    b2 = ck.trace(_rand(100, 8))          # same structure, fresh values
+    p1 = S.plan_wave(b1, 4, mode="auto")[0]
+    p2 = S.plan_wave(b2, 4, mode="auto")[0]
+    assert p1 is p2
+    # policy and structure are part of the key
+    assert S.plan_wave(b1, 4, mode="uniform")[0] is not p1
+    b3 = ck.trace(_rand(96, 8))           # different length: new structure
+    assert S.plan_wave(b3, 4, mode="auto")[0] is not p1
+
+
+def test_plan_cache_is_bounded_lru():
+    S.clear_plan_cache()
+
+    def kfn_of(n):
+        def kfn(t, x):
+            t.store(t.load(x) + 1)
+        return kfn
+
+    for i in range(S._PLAN_CAP + 8):
+        b = nmc.jit(kfn_of(i)).trace(_rand(8 + i, 8))
+        S.plan_wave(b, 2, mode="uniform")
+    assert len(S._plan_cache) == S._PLAN_CAP
+
+
+def test_schedule_kwarg_validates_eagerly():
+    def kfn(t, x):
+        t.store(t.load(x) + 1)
+
+    with pytest.raises(ValueError, match="schedule"):
+        nmc.jit(kfn, schedule="bogus")
+    ck = nmc.jit(kfn, tiles=2, runtime=_RT)
+    with pytest.raises(ValueError, match="schedule"):
+        ck(_rand(16, 8), schedule="bogus")
+
+
+def test_invalid_user_plan_is_rejected():
+    def kfn(t, x):
+        t.store(t.load(x) + 1)
+
+    b = nmc.jit(kfn).trace(_rand(32, 8))
+    bad = S.SchedulePlan("axis", (16, 16), ("caesar",), (0,), 2, 8,
+                         0.0, 0.0, 0.0, "user")
+    with pytest.raises(P.PartitionError, match="expects 1 shards"):
+        S.realize(b, bad)                 # chunk vector vs engines mismatch
+    bad2 = S.SchedulePlan("axis", (16, 16), ("caesar", "vliw"), (0, 1),
+                          2, 8, 0.0, 0.0, 0.0, "user")
+    with pytest.raises(ValueError, match="unknown engine"):
+        S.realize(b, bad2)
+    bad3 = S.SchedulePlan("axis", (16, 16), ("caesar", "caesar"), (0,),
+                          2, 8, 0.0, 0.0, 0.0, "user")
+    with pytest.raises(ValueError, match="length mismatch"):
+        S.realize(b, bad3)
+
+
+# ---------------------------------------------------------------------------
+# Uniform-mode regression: cost-picked remainder spread / tail placement
+# ---------------------------------------------------------------------------
+
+def test_uniform_mode_beats_seed_on_uneven_matmul():
+    """The seed planner ceil-packs chunks (9 words over 8 tiles -> 5 busy
+    shards, tail last); uniform mode keeps uniform chunkings but lets the
+    wave model arbitrate the remainder spread — on an uneven sew32 matmul
+    the balanced spread engages every tile and models strictly fewer
+    cycles, while staying bit-exact."""
+    sew, cols, tiles = 32, 36, 8
+    A = _rand((8, 8), sew)
+    B = _rand((8, cols), sew)
+
+    def mm(t, A, B):
+        a = t.consts(A)
+        rows = [t.load(B[r]) for r in range(8)]
+        for i in range(8):
+            acc = None
+            for kk in range(8):
+                acc = nmc.mac(acc, a[i, kk], rows[kk])
+            t.store(acc)
+
+    ck = nmc.jit(mm, sew=sew, tiles=tiles, partition="axis", runtime=_RT)
+    b = ck.trace(A, B)
+    uni = S.uniform_plan(b, tiles, partition="axis")
+    assert uni.modeled_cycles < uni.seed_cycles      # the regression fixed
+    # the cost model spread the remainder across all 8 tiles instead of
+    # ceil-packing 9 words onto 5 shards
+    assert uni.n_shards == tiles
+    assert np.array_equal(ck(A, B), ck.oracle(A, B))
+
+
+def test_uniform_mode_keeps_seed_chunking_when_it_wins():
+    """Uniform mode is tie-broken to the seed planner's exact behavior:
+    when the ceil-packed chunking is not beaten, the plan reproduces the
+    seed's shard layout (no gratuitous churn)."""
+    def kfn(t, x):
+        t.store((t.load(x) * 3 + 1).max(0))
+
+    n, tiles = 256, 4                      # divides evenly: no remainder
+    b = nmc.jit(kfn).trace(_rand(n, 8))
+    uni = S.uniform_plan(b, tiles)
+    seed_pl = P.plan(b, tiles)
+    assert uni.chunks == tuple(p[0][2] - p[0][1] for p in seed_pl.pieces)
+    assert uni.order == tuple(range(uni.n_shards))
+
+
+# ---------------------------------------------------------------------------
+# Autotuning
+# ---------------------------------------------------------------------------
+
+def test_autotuned_never_models_more_than_uniform():
+    def kfn(t, x, y):
+        t.store((t.load(x, bank=0) * 3 + t.load(y)).max(0))
+
+    for tiles in (2, 4, 8):
+        b = nmc.jit(kfn).trace(_rand(300, 8), _rand(300, 8))
+        tuned = S.autotune(b, tiles)
+        assert tuned.modeled_cycles <= tuned.uniform_cycles
+        assert tuned.uniform_cycles <= tuned.seed_cycles
+
+
+def test_autotuned_matmul_bit_exact_sync_and_async():
+    sew, cols, tiles = 8, 512, 8
+    A, B = _rand((8, 8), sew), _rand((8, cols), sew)
+
+    def mm(t, A, B):
+        a = t.consts(A)
+        rows = [t.load(B[r]) for r in range(8)]
+        for i in range(8):
+            acc = None
+            for kk in range(8):
+                acc = nmc.mac(acc, a[i, kk], rows[kk])
+            t.store(acc)
+
+    ck = nmc.jit(mm, sew=sew, tiles=tiles, runtime=_RT)
+    ref = ck(A, B, schedule="uniform")
+    assert np.array_equal(ref, ck.oracle(A, B))
+    out = ck(A, B, schedule="auto")
+    assert np.array_equal(ref, out)
+    fut = ck.call_async(A, B, schedule="auto")
+    assert np.array_equal(ref, fut.result())
+    tuned = ck.plan_schedule(A, B, schedule="auto")
+    assert tuned.modeled_cycles < tuned.uniform_cycles
+
+
+# ---------------------------------------------------------------------------
+# Mixed-engine waves
+# ---------------------------------------------------------------------------
+
+def test_qrelu_dispatches_mixed_engine_wave_in_one_launch():
+    """The heterogeneous qrelu tape (7 bus-expressible rows + 1 unsigned
+    minu row) autotunes to a genuinely mixed Caesar+Carus wave — one
+    launch wave, one resident-pool dispatch call, per-engine compile
+    buckets — and stays bit-exact vs the all-Carus uniform plan."""
+    S.clear_plan_cache()
+    kfn, args = programs.qrelu_case(8)
+    rt = nmc.NmcRuntime()
+    ck = nmc.jit(kfn, tiles=8, partition="rows", runtime=rt)
+
+    uni = ck.plan_schedule(*args, schedule="uniform")
+    assert set(uni.engines) == {"carus"}     # whole-tape fallback engine
+    tuned = ck.plan_schedule(*args, schedule="auto")
+    assert tuned.mixed                        # genuinely heterogeneous
+    assert set(tuned.engines) == {"caesar", "carus"}
+    assert tuned.modeled_cycles < uni.modeled_cycles
+
+    ref = ck(*args, schedule="uniform")
+    q = rt.queue
+    w0, m0 = q.waves, q.mixed_engine_waves
+    d0 = rt.resident.dispatch_calls
+    out = ck(*args, schedule="auto")
+    assert np.array_equal(ref, out)
+    assert np.array_equal(ref, ck.oracle(*args))
+    assert q.waves - w0 == 1                       # one launch wave...
+    assert q.mixed_engine_waves - m0 == 1          # ...mixing both engines
+    assert rt.resident.dispatch_calls - d0 == 1    # one parallel step
+    # async path takes the identical (cached) plan
+    fut = ck.call_async(*args, schedule="auto")
+    assert np.array_equal(ref, fut.result())
+    assert q.mixed_engine_waves - m0 == 2
+
+
+def test_mixed_wave_verifies_per_engine_buckets():
+    """verify_wave groups the bucket-agreement contract per engine: a
+    mixed wave's Caesar and Carus shards legitimately sit at different
+    instruction counts."""
+    kfn, args = programs.qrelu_case(8)
+    ck = nmc.jit(kfn, tiles=8, partition="rows", runtime=_RT,
+                 schedule="auto")
+    pplan, lks = ck.lower_wave(*args)
+    engines = {lk.engine for lk in lks}
+    assert engines == {"caesar", "carus"}
+    rep = nmc.verify_wave(pplan.parent, pplan, lks)
+    assert not rep.errors, rep.render()
+    by_eng = {}
+    for lk in lks:
+        by_eng.setdefault(lk.engine, set()).add(lk.program.n_instr)
+    assert all(len(v) == 1 for v in by_eng.values())

@@ -110,3 +110,53 @@ def test_chained_wave_hand_example():
     #         output drains at 70
     w = timing.StageCost("w", 10.0, 20.0, 5.0)
     assert timing.chained_wave_cycles([[w], [w]], 1) == 70.0
+
+
+# -- tile-assignment policies (PR 10, DESIGN.md §14) -------------------------
+
+def test_greedy_assignment_hand_example():
+    from repro.core import timing
+    # three stages on two tiles: (in, comp, out) = (1,10,0) (1,1,0) (1,1,0)
+    # roundrobin pins stage 2 back onto tile 0 (busy until 11):
+    #   bus 1 -> t0 ends 11; bus 2 -> t1 ends 3; bus 3 -> t0 ends 12
+    # greedy places stage 2 on the earliest-free tile 1 (free at 3):
+    #   bus 3 -> t1 ends 4; the heavy tile 0 finishes at 11
+    stages = [timing.StageCost("a", 1.0, 10.0, 0.0),
+              timing.StageCost("b", 1.0, 1.0, 0.0),
+              timing.StageCost("c", 1.0, 1.0, 0.0)]
+    assert timing.wave_cycles(stages, 2, assign="roundrobin") == 12.0
+    assert timing.wave_cycles(stages, 2, assign="greedy") == 11.0
+
+
+def test_greedy_equals_roundrobin_when_stages_fit_tiles():
+    from repro.core import timing
+    # with stages <= tiles every stage lands on a fresh tile either way
+    stages = [_stage(i) for i in range(4)]
+    for n in (4, 6, 8):
+        assert timing.wave_cycles(stages, n, assign="greedy") \
+            == timing.wave_cycles(stages, n, assign="roundrobin")
+
+
+def test_greedy_never_worse_than_roundrobin():
+    from repro.core import timing
+    stages = [_stage(i, 5.0 + 3 * (i % 3), 80.0 - 7 * i, 3.0)
+              for i in range(7)]
+    for n in (1, 2, 3, 5):
+        assert timing.wave_cycles(stages, n, assign="greedy") \
+            <= timing.wave_cycles(stages, n, assign="roundrobin")
+
+
+def test_chained_wave_cycles_accepts_assign():
+    from repro.core import timing
+    waves = [[_stage(i) for i in range(5)], [_stage(i, 4, 30, 2)
+                                             for i in range(3)]]
+    rr = timing.chained_wave_cycles(waves, 2, assign="roundrobin")
+    gd = timing.chained_wave_cycles(waves, 2, assign="greedy")
+    assert gd <= rr
+    assert timing.wave_cycles(waves, 2, mode="chained", assign="greedy") == gd
+
+
+def test_unknown_assign_mode_rejected():
+    from repro.core import timing
+    with pytest.raises(AssertionError):
+        timing.wave_cycles([_stage(0)], 2, assign="fifo")
